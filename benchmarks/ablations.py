@@ -1,0 +1,79 @@
+"""AMC design-space ablations (beyond the paper's single configuration).
+
+Sweeps the four design knobs the paper fixes and measures their effect on
+one representative workload — the sensitivity analysis a deployment would
+run before committing silicon parameters:
+
+  - max_misses_per_entry (paper: 20, Fig 16)
+  - lookahead_accesses   (paper: implicit via frontier buffer depth)
+  - storage_fraction     (paper: 20% reserve, §IV-A)
+  - match_pairs          (strict (prev,cur) CAM match vs trigger-only)
+
+    PYTHONPATH=src python -m benchmarks.ablations [--dataset comdblp]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernel", default="pgd")
+    ap.add_argument("--dataset", default="comdblp")
+    ap.add_argument("--out", default="results/ablations.json")
+    args = ap.parse_args()
+
+    from repro.core import build_workload, run_prefetcher_suite
+    from repro.core.amc import AMCConfig, AMCPrefetcher
+
+    w = build_workload(args.kernel, args.dataset)
+    grid = []
+    base = dict(
+        max_misses_per_entry=20,
+        lookahead_accesses=90,
+        storage_fraction=0.5,
+        match_pairs=False,
+    )
+    sweeps = {
+        "max_misses_per_entry": [5, 10, 20, 40],
+        "lookahead_accesses": [10, 30, 90, 300, 1200],
+        "storage_fraction": [0.1, 0.25, 0.5, 1.0],
+        "match_pairs": [False, True],
+    }
+    rows = []
+    for knob, values in sweeps.items():
+        for v in values:
+            kw = dict(base)
+            kw[knob] = v
+            cfg = AMCConfig(**kw, name=f"amc[{knob}={v}]")
+            m = run_prefetcher_suite(w, {cfg.name: AMCPrefetcher(cfg).generate})[
+                cfg.name
+            ]
+            row = dict(
+                knob=knob,
+                value=v,
+                speedup=round(m.speedup, 3),
+                coverage=round(m.coverage, 3),
+                accuracy=round(m.accuracy, 3),
+                late=m.late,
+                evicted_early=m.evicted_early,
+                metadata_traffic=round(m.metadata_traffic, 3),
+                storage_peak_frac=round(
+                    m.info.get("storage_peak_bytes", 0) / w.input_bytes, 3
+                ),
+            )
+            rows.append(row)
+            print(
+                f"{knob}={v!s:>6}: speedup {row['speedup']:.2f} "
+                f"cov {row['coverage']:.2f} acc {row['accuracy']:.2f} "
+                f"late {row['late']} meta {row['metadata_traffic']:.2f}"
+            )
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"workload": f"{args.kernel}/{args.dataset}", "rows": rows}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

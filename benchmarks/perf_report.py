@@ -1,0 +1,54 @@
+"""Perf-iteration scorecard: baseline vs final roofline, per cell.
+
+    PYTHONPATH=src python -m benchmarks.perf_report
+
+Reads results/roofline_baseline.json (snapshot taken before the §5 perf
+iterations) and the current dry-run/probe artifacts, writes
+results/roofline_final.md with both tables + the delta table.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main():
+    sys.path.insert(0, "src")
+    from repro.launch import roofline
+
+    rows = roofline.table()
+    with open("results/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+    base = {
+        (r["arch"], r["shape"]): r
+        for r in json.load(open("results/roofline_baseline.json"))
+    }
+    cur = {(r["arch"], r["shape"]): r for r in rows}
+
+    lines = [
+        "# Roofline — final (post §5 perf iterations), 16x16 single-pod\n",
+        roofline.markdown(rows),
+        "\n\n# Delta vs baseline (dominant-term seconds)\n",
+        "| cell | baseline dominant | final dominant | reduction |",
+        "|---|---|---|---|",
+    ]
+    for key in sorted(cur):
+        if key not in base:
+            continue
+        b, c = base[key], cur[key]
+        bt = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        ct = max(c["compute_s"], c["memory_s"], c["collective_s"])
+        red = bt / max(ct, 1e-12)
+        lines.append(
+            f"| {key[0]}/{key[1]} | {b['dominant']} {bt:.3e} | "
+            f"{c['dominant']} {ct:.3e} | {red:.2f}x |"
+        )
+    out = "\n".join(lines)
+    with open("results/roofline_final.md", "w") as f:
+        f.write(out)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints one CSV block per paper table/figure (name,us_per_call,derived) plus
+kernel micro-benchmarks. Heavy sweep data comes from cached JSONs
+(benchmarks/sweep.py, repro.launch.dryrun) — run those first for the full
+report; this entry point stays fast.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def _time_us(fn, repeats=3):
+    fn()  # warm / compile
+    t0 = time.time()
+    for _ in range(repeats):
+        fn()
+    return (time.time() - t0) / repeats * 1e6
+
+
+def kernel_bench():
+    """Kernel micro-benches (interpret on CPU; TPU is the target)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attn.ops import mha
+    from repro.kernels.amc_gather.amc_gather import amc_gather
+    from repro.kernels.basedelta.basedelta import basedelta_compress_tiles
+    from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+    from repro.memsim.scan_cache import cache_pass
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(key, (2, 256, 2, 64), jnp.float32)
+    rows.append(
+        ("flash_attn_interp_2x256x4x64",
+         _time_us(lambda: np.asarray(mha(q, k, k, interpret=True))), "")
+    )
+    table = jax.random.normal(key, (1024, 128), jnp.float32)
+    idx = jnp.arange(512, dtype=jnp.int32) % 1024
+    rows.append(
+        ("amc_gather_interp_512x128",
+         _time_us(lambda: np.asarray(amc_gather(table, idx, interpret=True))), "")
+    )
+    tiles = jnp.asarray(
+        np.random.default_rng(0).integers(0, 1 << 20, (64, 32)), jnp.int32
+    )
+    counts = jnp.full((64,), 20, jnp.int32)
+    rows.append(
+        ("basedelta_interp_64x32",
+         _time_us(lambda: [np.asarray(x) for x in basedelta_compress_tiles(tiles, counts, interpret=True)]), "")
+    )
+    x = jax.random.normal(key, (4, 128, 32), jnp.float32)
+    dt = jnp.full((4, 128), 0.5, jnp.float32)
+    a = jnp.full((4,), -1.0, jnp.float32)
+    b = jax.random.normal(key, (4, 128, 16), jnp.float32)
+    rows.append(
+        ("ssd_scan_interp_4x128x32",
+         _time_us(lambda: np.asarray(ssd_scan(x, dt, a, b, b, chunk=32, interpret=True))), "")
+    )
+    blocks = np.random.default_rng(0).integers(0, 4096, 1_000_000).astype(np.int64)
+    us = _time_us(lambda: cache_pass(blocks, 64, 8), repeats=2)
+    rows.append(
+        ("cache_pass_1M_accesses", us, f"{1e6 / (us / 1e6) / 1e6:.1f}M acc/s")
+    )
+    return rows
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import figures
+
+    data = figures.load()
+    print("name,us_per_call,derived")
+
+    if not data:
+        print("sweep_missing,0,run benchmarks.sweep first")
+    else:
+        for name, fn in [
+            ("fig8_speedup", figures.fig8_speedup),
+            ("fig9_coverage", figures.fig9_coverage),
+            ("fig10_accuracy", figures.fig10_accuracy),
+            ("fig11_timeliness", figures.fig11_timeliness),
+            ("fig12_13_traffic", figures.fig12_13_traffic),
+            ("fig15_storage", figures.fig15_storage),
+            ("fig16_miss_size", figures.fig16_miss_size),
+            ("compression_ratio", figures.compression_stats),
+        ]:
+            t0 = time.time()
+            headers, rows, derived = fn(data)
+            us = (time.time() - t0) * 1e6
+            key_items = ";".join(f"{k}={v:.3f}" for k, v in list(derived.items())[:6])
+            print(f"{name},{us:.0f},{key_items}")
+        figures.table8_storage()
+        print("table8_storage,0,static accounting (see EXPERIMENTS.md)")
+
+    # roofline summary from dry-run cells
+    try:
+        from repro.launch import roofline
+
+        rows = roofline.table()
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_fraction"])
+            best = max(rows, key=lambda r: r["roofline_fraction"])
+            print(
+                f"roofline,0,cells={len(rows)};best={best['arch']}/{best['shape']}"
+                f"={best['roofline_fraction']:.2f};worst={worst['arch']}/"
+                f"{worst['shape']}={worst['roofline_fraction']:.2f}"
+            )
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline,0,unavailable ({e})")
+
+    for name, us, derived in kernel_bench():
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

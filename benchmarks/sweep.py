@@ -1,0 +1,128 @@
+"""Full prefetcher sweep: every (kernel, dataset) x every prefetcher.
+
+Produces one JSON per workload under ``results/`` (resumable — existing
+files are skipped). All paper figures (Figs 8-16) are assembled from these
+JSONs by the per-figure benchmark modules.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.sweep [--kernels pgd,cc] [--datasets amazon]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+# Per-kernel dataset subsets (the paper also evaluates different inputs per
+# kernel; e.g. Road-CA x PGD "requires weeks" and is excluded there too).
+MATRIX = {
+    "pgd": ["amazon", "stanford", "youtube", "comdblp", "google"],
+    "cc": ["amazon", "youtube", "notredame", "google"],
+    "bfs": ["amazon", "road-ca", "stanford", "notredame"],
+    "bellmanford": ["amazon", "google", "stanford", "comdblp"],
+}
+
+PREFETCHERS = ["amc", "vldp", "bingo", "isb", "misb", "rnr", "domino", "prodigy", "ideal"]
+
+
+def miss_size_histogram(workload) -> dict:
+    """Fig 16 source: distribution of per-correlation-entry miss counts
+    assuming infinite entry size (pre-split group sizes)."""
+    sizes = []
+    for view, _ in workload.amc_iteration_views():
+        if len(view.target_pos) == 0 or len(view.miss_pos) == 0:
+            continue
+        tag = np.searchsorted(view.target_pos, view.miss_pos, side="right") - 1
+        tag = tag[tag >= 0]
+        if len(tag) == 0:
+            continue
+        sizes.append(np.bincount(tag - tag.min()))
+    if not sizes:
+        return {"sizes": []}
+    allsizes = np.concatenate(sizes)
+    allsizes = allsizes[allsizes > 0]
+    hist = np.bincount(np.minimum(allsizes, 64))
+    return {
+        "hist": hist.tolist(),
+        "pct_gt20": float((allsizes > 20).mean()),
+        "pct_entries_le20": float((allsizes <= 20).mean()),
+    }
+
+
+def run_workload(kernel: str, dataset: str, out_dir: str, prefetchers=None):
+    from repro.core import build_workload, run_prefetcher_suite
+    from repro.core.amc import AMCPrefetcher, AMCConfig
+    from repro.core.prefetchers import SUITE
+    from repro.core.prefetchers.simple import ideal_l2
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{kernel}_{dataset}.json")
+    if os.path.exists(path):
+        print(f"[skip] {path}")
+        return
+
+    t0 = time.time()
+    w = build_workload(kernel, dataset)
+    gen = {"amc": AMCPrefetcher(AMCConfig()).generate, "ideal": ideal_l2}
+    gen.update(SUITE)
+    names = prefetchers or PREFETCHERS
+    res = run_prefetcher_suite(w, {n: gen[n] for n in names})
+    base = w.profile.baseline_counts(w.eval_from_pos)
+    out = {
+        "kernel": kernel,
+        "dataset": dataset,
+        "accesses": int(w.num_accesses),
+        "eval_from_pos": int(w.eval_from_pos),
+        "input_bytes": int(w.input_bytes),
+        "baseline": base,
+        "elapsed_s": time.time() - t0,
+        "miss_size": miss_size_histogram(w),
+        "prefetchers": {n: _to_jsonable(m.row()) for n, m in res.items()},
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(
+        f"[done] {kernel}/{dataset} in {out['elapsed_s']:.0f}s  "
+        + "  ".join(
+            f"{n}:s={res[n].speedup:.2f},c={res[n].coverage:.2f},a={res[n].accuracy:.2f}"
+            for n in names
+        )
+    )
+
+
+def _to_jsonable(obj):
+    if isinstance(obj, dict):
+        return {k: _to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, tuple):
+        return list(obj)
+    return obj
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels", default=",".join(MATRIX))
+    ap.add_argument("--datasets", default="")
+    ap.add_argument("--prefetchers", default=",".join(PREFETCHERS))
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    kernels = args.kernels.split(",")
+    pfs = args.prefetchers.split(",")
+    for k in kernels:
+        for d in MATRIX[k]:
+            if args.datasets and d not in args.datasets.split(","):
+                continue
+            run_workload(k, d, args.out, pfs)
+
+
+if __name__ == "__main__":
+    main()

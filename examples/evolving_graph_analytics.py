@@ -1,0 +1,83 @@
+"""End-to-end evolving-graph analytics with AMC — the paper's own workload.
+
+Runs BFS twice per the paper's §VI protocol (80% subgraph, then -10%/+10%
+vertices), evaluates AMC on the second run, and demonstrates the TPU-native
+AMC-gather path: the recorded property-gather index stream of run 1 drives
+the double-buffered Pallas gather in run 2 (DESIGN.md §2.2).
+
+    PYTHONPATH=src python examples/evolving_graph_analytics.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_workload, run_prefetcher_suite
+from repro.core.amc import AMCConfig, AMCPrefetcher
+from repro.graphs import make_dataset, make_evolving_pair
+from repro.kernels.amc_gather.ops import AMCGatherSession
+
+
+def amc_gather_demo():
+    """The TPU analogue: replay run-1's gather stream in run 2."""
+    g = make_dataset("comdblp")
+    pair = make_evolving_pair(g, seed=1)
+    print(
+        f"evolving pair: run1 {pair.run1.num_edges} edges, "
+        f"run2 {pair.run2.num_edges} edges, overlap {pair.vertex_overlap:.0%}"
+    )
+    # property table + the two runs' gather streams. Streams are keyed by
+    # VERTEX (like AMC's trigger-keyed entries), not by CSR position — raw
+    # positional streams shift wholesale when edges are deleted.
+    table = jnp.asarray(
+        np.random.default_rng(0).normal(size=(g.num_vertices, 128)).astype(np.float32)
+    )
+    import numpy as _np
+
+    def vertex_stream(run, vids, cap=8):
+        out = []
+        for v in vids:
+            s, e = run.offsets[v], run.offsets[v + 1]
+            row = run.neighbors[s:e][:cap]
+            out.append(_np.pad(row, (0, cap - len(row)), constant_values=v))
+        return _np.concatenate(out).astype(_np.int32)
+
+    deg = _np.minimum(pair.run1.degrees, pair.run2.degrees)
+    vids = _np.argsort(-deg)[:512]
+    idx1 = vertex_stream(pair.run1, vids)
+    idx2 = vertex_stream(pair.run2, vids)
+    sess = AMCGatherSession(interpret=True)
+    # run 1: record (cold)
+    sess.gather(table, jnp.asarray(idx1))
+    sess.update()  # AMC.update(): role swap
+    # run 2: replayed stream drives the pipelined gather; changed rows fixed
+    out2 = sess.gather(table, jnp.asarray(idx2))
+    ref = table[idx2]
+    match = float((idx1 == idx2).mean())
+    print(
+        f"amc_gather: replayed={sess.stats['replayed']} "
+        f"fallback={sess.stats['fallback']} stream-stability={match:.0%} "
+        f"exact={bool(jnp.allclose(out2, ref))}"
+    )
+
+
+def main():
+    print("=== BFS on evolving graph (paper §VI protocol) ===")
+    w = build_workload("bfs", "notredame")
+    res = run_prefetcher_suite(
+        w, {"amc": AMCPrefetcher(AMCConfig()).generate}
+    )
+    m = res["amc"]
+    print(
+        f"run-2 evaluation: speedup {m.speedup:.2f}x, "
+        f"coverage {m.coverage:.0%}, accuracy {m.accuracy:.0%}, "
+        f"late {m.late/max(m.useful,1):.0%} of useful"
+    )
+    print("\n=== TPU-native recorded-stream gather ===")
+    amc_gather_demo()
+
+
+if __name__ == "__main__":
+    main()

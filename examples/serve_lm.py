@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + decode against a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mixtral_8x22b]
+(reduced configs on CPU; the same entry point drives full configs on TPU).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "qwen3_4b"]
+    serve_main(args + ["--reduced", "--batch", "4", "--prompt-len", "16", "--gen", "16"])

@@ -1,0 +1,42 @@
+"""Evolving-graph applications (Ligra-style, JAX) + memory-trace generation.
+
+Four kernels from the paper's evaluation:
+  PGD  -- PageRankDelta (early-convergence iterative; Ligra)
+  CC   -- Connected Components (label propagation; Ligra)
+  BFS  -- Breadth-First Search (run twice on evolving inputs)
+  BF   -- BellmanFord SSSP (run twice on evolving inputs)
+
+Each app is written against the ``edge_map``/``vertex_map`` primitives in
+:mod:`repro.apps.ligra` (jitted ``jnp`` segment ops) and returns an
+:class:`repro.apps.ligra.AppRun` carrying per-iteration frontiers, which the
+tracer (:mod:`repro.apps.trace`) turns into the V/N/P/F memory access
+streams of the paper's Fig 3.
+"""
+from repro.apps.ligra import AppRun, edge_map_sum, edge_map_min
+from repro.apps.pagerank_delta import pagerank_delta
+from repro.apps.connected_components import connected_components
+from repro.apps.bfs import bfs
+from repro.apps.bellman_ford import bellman_ford
+from repro.apps.trace import TraceConfig, IterationTrace, trace_app_run, ARRAYS
+
+KERNELS = {
+    "pgd": pagerank_delta,
+    "cc": connected_components,
+    "bfs": bfs,
+    "bellmanford": bellman_ford,
+}
+
+__all__ = [
+    "AppRun",
+    "edge_map_sum",
+    "edge_map_min",
+    "pagerank_delta",
+    "connected_components",
+    "bfs",
+    "bellman_ford",
+    "TraceConfig",
+    "IterationTrace",
+    "trace_app_run",
+    "ARRAYS",
+    "KERNELS",
+]

@@ -1,0 +1,55 @@
+"""BellmanFord SSSP (Ligra) — push-based relaxation with change frontier."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.bfs import pick_root
+from repro.apps.ligra import AppRun, run_iterations
+from repro.graphs.csr import CSRGraph
+
+
+def bellman_ford(
+    graph: CSRGraph,
+    root: int | None = None,
+    max_iters: int = 200,
+    present_mask: np.ndarray | None = None,
+) -> AppRun:
+    n = graph.num_vertices
+    offsets, neighbors, weights, edge_src = graph.device()
+    if root is None:
+        root = pick_root(graph, present_mask)
+
+    present = (
+        jnp.asarray(present_mask)
+        if present_mask is not None
+        else jnp.ones(n, dtype=bool)
+    )
+    inf = jnp.float32(3.0e38)
+
+    @partial(jax.jit, donate_argnums=())
+    def step(state, frontier_mask):
+        (dist,) = state
+        cand = jnp.where(frontier_mask[edge_src], dist[edge_src] + weights, inf)
+        best = jax.ops.segment_min(cand, neighbors, num_segments=n)
+        improved = (best < dist) & present
+        new_dist = jnp.where(improved, best, dist)
+        return (new_dist,), improved, ~jnp.any(improved)
+
+    dist0 = jnp.full(n, inf, dtype=jnp.float32)
+    dist0 = dist0.at[root].set(0.0)
+    init_mask = np.zeros(n, dtype=bool)
+    init_mask[root] = True
+
+    return run_iterations(
+        name="bellmanford",
+        graph=graph,
+        init_state=(dist0,),
+        init_frontier_mask=init_mask,
+        step_fn=step,
+        max_iters=max_iters,
+        extract_values=lambda s: s[0],
+    )

@@ -1,0 +1,69 @@
+"""Breadth-First Search (Ligra BFS) — push-based parent assignment.
+
+For the evolving-graph protocol the kernel is run twice (run-1 / run-2
+inputs from :mod:`repro.graphs.evolve`); the paper evaluates the second run.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.ligra import AppRun, run_iterations
+from repro.graphs.csr import CSRGraph
+
+
+def pick_root(graph: CSRGraph, present_mask: np.ndarray | None = None) -> int:
+    """Deterministic root: highest out-degree present vertex."""
+    deg = graph.degrees.copy()
+    if present_mask is not None:
+        deg = np.where(present_mask, deg, -1)
+    return int(np.argmax(deg))
+
+
+def bfs(
+    graph: CSRGraph,
+    root: int | None = None,
+    max_iters: int = 200,
+    present_mask: np.ndarray | None = None,
+) -> AppRun:
+    n = graph.num_vertices
+    offsets, neighbors, _, edge_src = graph.device()
+    if root is None:
+        root = pick_root(graph, present_mask)
+
+    present = (
+        jnp.asarray(present_mask)
+        if present_mask is not None
+        else jnp.ones(n, dtype=bool)
+    )
+    big = jnp.float32(n + 1)
+
+    @partial(jax.jit, donate_argnums=())
+    def step(state, frontier_mask):
+        (parent,) = state
+        # Active sources offer themselves as parent; min-id wins (Ligra's CAS
+        # winner is arbitrary; min makes it deterministic).
+        msg = jnp.where(frontier_mask[edge_src], edge_src.astype(jnp.float32), big)
+        offer = jax.ops.segment_min(msg, neighbors, num_segments=n)
+        unvisited = parent >= big
+        newly = unvisited & (offer < big) & present
+        new_parent = jnp.where(newly, offer, parent)
+        return (new_parent,), newly, ~jnp.any(newly)
+
+    parent0 = jnp.full(n, big, dtype=jnp.float32)
+    parent0 = parent0.at[root].set(root)
+    init_mask = np.zeros(n, dtype=bool)
+    init_mask[root] = True
+
+    return run_iterations(
+        name="bfs",
+        graph=graph,
+        init_state=(parent0,),
+        init_frontier_mask=init_mask,
+        step_fn=step,
+        max_iters=max_iters,
+        extract_values=lambda s: s[0],
+    )

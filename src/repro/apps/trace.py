@@ -1,0 +1,189 @@
+"""Memory-trace generation: app run -> per-iteration access streams (Fig 3).
+
+For every active source vertex v (processed in frontier order, as Ligra's
+sparse vertexSubset does) the per-vertex access pattern of a push-based
+kernel is:
+
+    F[v]          frontier check                   (frontier array)
+    T[v]          target read (delta/label/dist)   (TARGET data structure)
+    V[v], V[v+1]  CSR row bounds (same line or adjacent)
+    for e in row(v):  N[e]   edge read
+                      P[dst] neighbor property update   <- the misses
+
+The paper's AMC registers mark T's range (AddrTBase) and F's range
+(AddrFBase); everything is emitted as *addresses* so range filtering happens
+exactly as in hardware. Element sizes: F 1B (ligra bool frontier), T 8B,
+V 8B, N 4B, P 8B; arrays live in disjoint page-aligned regions.
+
+Traces are numpy struct-of-arrays; the cache simulator consumes the 64-bit
+block ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.apps.ligra import AppRun
+from repro.graphs.csr import CSRGraph
+
+BLOCK_BITS = 6  # 64B lines
+PAGE_BITS = 12  # 4KB pages
+
+# array id -> (symbol, element size in bytes)
+ARRAYS: Dict[int, tuple] = {
+    0: ("F", 1),  # frontier bitmap
+    1: ("T", 8),  # target (delta / label / dist) -- AddrTBase range
+    2: ("V", 8),  # CSR offsets
+    3: ("N", 4),  # edge/neighbor array
+    4: ("P", 8),  # vertex property (push destination)
+}
+F_ID, T_ID, V_ID, N_ID, P_ID = 0, 1, 2, 3, 4
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """Address-space layout for one app instance."""
+
+    num_vertices: int
+    num_edges: int
+    base: int = 0x1000_0000
+
+    def region(self, array_id: int) -> tuple:
+        """(base_addr, size_bytes) for an array, page aligned regions."""
+        sizes = {
+            F_ID: self.num_vertices * 1,
+            T_ID: self.num_vertices * 8,
+            V_ID: (self.num_vertices + 1) * 8,
+            N_ID: self.num_edges * 4,
+            P_ID: self.num_vertices * 8,
+        }
+        addr = self.base
+        for aid in range(array_id):
+            size = sizes[aid]
+            pages = -(-size // (1 << PAGE_BITS)) + 1  # +1 guard page
+            addr += pages << PAGE_BITS
+        return addr, sizes[array_id]
+
+    def addr(self, array_id: np.ndarray, elem: np.ndarray) -> np.ndarray:
+        out = np.zeros(len(elem), dtype=np.int64)
+        for aid, (_, esz) in ARRAYS.items():
+            base, _ = self.region(aid)
+            sel = array_id == aid
+            out[sel] = base + elem[sel].astype(np.int64) * esz
+        return out
+
+    @property
+    def target_range(self) -> tuple:
+        return self.region(T_ID)
+
+    @property
+    def frontier_range(self) -> tuple:
+        return self.region(F_ID)
+
+    @property
+    def input_bytes(self) -> int:
+        """Application input footprint (V+N+P+F+T) for storage-overhead %."""
+        return sum(self.region(a)[1] for a in ARRAYS)
+
+
+@dataclasses.dataclass
+class IterationTrace:
+    """One iteration's access stream (struct of arrays)."""
+
+    array_id: np.ndarray  # int8
+    elem: np.ndarray  # int64 element index
+    addr: np.ndarray  # int64 byte address
+    block: np.ndarray  # int64 cache-line id (addr >> 6)
+    src_vertex: np.ndarray  # int64: active source vertex owning this access
+    iteration: int
+
+    def __len__(self) -> int:
+        return len(self.addr)
+
+    @property
+    def is_target(self) -> np.ndarray:
+        return self.array_id == T_ID
+
+    @property
+    def is_frontier(self) -> np.ndarray:
+        return self.array_id == F_ID
+
+
+def _iteration_trace(
+    graph: CSRGraph, active: np.ndarray, cfg: TraceConfig, iteration: int
+) -> IterationTrace:
+    offsets = graph.offsets
+    neighbors = graph.neighbors
+    k = len(active)
+    deg = (offsets[active + 1] - offsets[active]).astype(np.int64)
+    e_total = int(deg.sum())
+    lengths = 3 + 2 * deg  # F,T,V headers + interleaved N,P
+    starts = np.zeros(k, dtype=np.int64)
+    np.cumsum(lengths[:-1], out=starts[1:])
+    total = int(lengths.sum())
+
+    array_id = np.empty(total, dtype=np.int8)
+    elem = np.empty(total, dtype=np.int64)
+    src_vertex = np.empty(total, dtype=np.int64)
+
+    # Headers.
+    array_id[starts] = F_ID
+    array_id[starts + 1] = T_ID
+    array_id[starts + 2] = V_ID
+    for off in range(3):
+        elem[starts + off] = active
+        src_vertex[starts + off] = active
+
+    if e_total:
+        owner = np.repeat(np.arange(k, dtype=np.int64), deg)
+        e_rank = np.arange(e_total, dtype=np.int64)
+        deg_cum = np.zeros(k, dtype=np.int64)
+        np.cumsum(deg[:-1], out=deg_cum[1:])
+        j = e_rank - deg_cum[owner]  # edge index within the vertex row
+        edge_global = offsets[active[owner]] + j  # position in N array
+        dsts = neighbors[edge_global]
+        pos_n = starts[owner] + 3 + 2 * j
+        pos_p = pos_n + 1
+        array_id[pos_n] = N_ID
+        elem[pos_n] = edge_global
+        src_vertex[pos_n] = active[owner]
+        array_id[pos_p] = P_ID
+        elem[pos_p] = dsts
+        src_vertex[pos_p] = active[owner]
+
+    addr = cfg.addr(array_id, elem)
+    return IterationTrace(
+        array_id=array_id,
+        elem=elem,
+        addr=addr,
+        block=addr >> BLOCK_BITS,
+        src_vertex=src_vertex,
+        iteration=iteration,
+    )
+
+
+def trace_app_run(run: AppRun, cfg: TraceConfig | None = None) -> List[IterationTrace]:
+    """Generate the per-iteration traces for an app run."""
+    g = run.graph
+    cfg = cfg or TraceConfig(num_vertices=g.num_vertices, num_edges=g.num_edges)
+    return [
+        _iteration_trace(g, f, cfg, i) for i, f in enumerate(run.frontiers)
+    ]
+
+
+def concat_traces(traces: List[IterationTrace], epoch_of=None):
+    """Flatten to (block, array_id, epoch_id, elem) arrays for the simulator.
+
+    ``epoch_of`` maps an iteration index to its AMC epoch (identity by
+    default; BFS/BellmanFord group a whole run into one epoch).
+    """
+    block = np.concatenate([t.block for t in traces])
+    array_id = np.concatenate([t.array_id for t in traces])
+    elem = np.concatenate([t.elem for t in traces])
+    epoch_of = epoch_of or (lambda i: i)
+    iter_id = np.concatenate(
+        [np.full(len(t), epoch_of(t.iteration), dtype=np.int32) for t in traces]
+    )
+    return block, array_id, iter_id, elem

@@ -1,0 +1,151 @@
+"""Sharded checkpoint manager with two-phase atomic commit.
+
+Layout per step::
+
+    <dir>/step_000123.tmp/           (write phase)
+        arrays.npz                   one entry per flattened leaf
+        MANIFEST.json                tree structure + shapes + checksums
+    <dir>/step_000123/               (rename = commit point)
+
+Restart semantics: ``latest_step()`` scans committed directories only, so a
+crash mid-write can never be resumed from (the .tmp dir is garbage-collected
+on the next save). Checksums (crc32 per leaf) catch torn/corrupt files; a
+corrupt checkpoint is skipped and the previous one used — together with the
+launcher's retry loop this is the node-failure recovery path. Restore
+accepts a *different* device mesh than the one that saved: arrays are
+loaded on host then device_put against the new sharding (elastic rescale).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------ save ------------------------------
+
+    def save(self, step: int, state: Any) -> str:
+        tag = f"step_{step:09d}"
+        tmp = os.path.join(self.dir, tag + ".tmp")
+        final = os.path.join(self.dir, tag)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+        arrays = {}
+        manifest = {"step": step, "leaves": []}
+        for i, (path, leaf) in enumerate(flat):
+            key = f"leaf_{i}"
+            arr = np.asarray(jax.device_get(leaf))
+            logical_dtype = str(arr.dtype)
+            if arr.dtype.kind == "V":  # bfloat16 etc: npz-safe uint view
+                arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+            arrays[key] = arr
+            manifest["leaves"].append(
+                {
+                    "key": key,
+                    "path": jax.tree_util.keystr(path),
+                    "shape": list(arr.shape),
+                    "dtype": logical_dtype,
+                    "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+                }
+            )
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # commit point
+        self._gc()
+        return final
+
+    # ----------------------------- restore ----------------------------
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return max(steps) if steps else None
+
+    def restore(
+        self, state_like: Any, step: Optional[int] = None, shardings: Any = None
+    ) -> tuple:
+        """Restore into the structure of ``state_like``.
+
+        Tries checkpoints newest-first; corrupt ones (bad checksum/missing
+        leaf) are skipped — the node-failure recovery path."""
+        candidates = (
+            [step]
+            if step is not None
+            else sorted(
+                {
+                    int(n.split("_")[1])
+                    for n in os.listdir(self.dir)
+                    if n.startswith("step_") and not n.endswith(".tmp")
+                },
+                reverse=True,
+            )
+        )
+        for s in candidates:
+            try:
+                return self._restore_one(state_like, s, shardings), s
+            except Exception as e:  # noqa: BLE001
+                print(f"[ckpt] step {s} unusable ({e}); trying older")
+        raise FileNotFoundError(f"no usable checkpoint in {self.dir}")
+
+    def _restore_one(self, state_like, step, shardings):
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat, treedef = jax.tree_util.tree_flatten(state_like)
+        shard_flat = (
+            jax.tree_util.tree_flatten(shardings)[0] if shardings else [None] * len(flat)
+        )
+        assert len(manifest["leaves"]) == len(flat), "tree structure changed"
+        out = []
+        for leaf_info, like, shard in zip(manifest["leaves"], flat, shard_flat):
+            arr = data[leaf_info["key"]]
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != leaf_info["crc32"]:
+                raise IOError(f"checksum mismatch on {leaf_info['path']}")
+            want = leaf_info["dtype"]
+            if str(arr.dtype) != want:  # restore logical dtype (bf16 view)
+                import ml_dtypes
+
+                arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
+            if shard is not None:
+                out.append(jax.device_put(arr, shard))
+            else:
+                out.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _gc(self):
+        steps = sorted(
+            {
+                int(n.split("_")[1])
+                for n in os.listdir(self.dir)
+                if n.startswith("step_") and not n.endswith(".tmp")
+            }
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+        for n in os.listdir(self.dir):
+            if n.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, n), ignore_errors=True)

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: the AMC prefetcher system.
+
+Subpackages:
+  amc          -- Access-to-Miss Correlation prefetcher (recording, BaseΔ
+                  compression, AMC Cache model, programming interface)
+  prefetchers  -- the evaluated baselines (next-line, VLDP, ISB, MISB,
+                  Bingo, RnR, Domino, DROPLET/Prodigy model)
+  driver       -- the composite-run workload driver tying apps, traces,
+                  memsim and prefetchers together
+"""
+from repro.core.driver import WorkloadTrace, build_workload, run_prefetcher_suite
+
+__all__ = ["WorkloadTrace", "build_workload", "run_prefetcher_suite"]

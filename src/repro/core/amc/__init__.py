@@ -1,0 +1,22 @@
+"""Access-to-Miss Correlation (AMC) prefetcher — the paper's contribution."""
+from repro.core.amc.compression import (
+    basedelta_compress,
+    basedelta_decompress,
+    compressed_entry_bytes,
+    CompressionStats,
+)
+from repro.core.amc.storage import AMCStorage, AMCEntryTable
+from repro.core.amc.prefetcher import AMCConfig, AMCPrefetcher
+from repro.core.amc.api import AMCSession
+
+__all__ = [
+    "basedelta_compress",
+    "basedelta_decompress",
+    "compressed_entry_bytes",
+    "CompressionStats",
+    "AMCStorage",
+    "AMCEntryTable",
+    "AMCConfig",
+    "AMCPrefetcher",
+    "AMCSession",
+]

@@ -1,0 +1,114 @@
+"""AMC's lightweight programming interface (paper §IV, Table V).
+
+The five calls map 1:1 onto the paper's API. In hardware these set
+architectural registers; here they configure an :class:`AMCSession` that the
+workload driver consults — the same separation as the paper: the *software*
+only identifies two data structures and the iteration boundary, everything
+else is "hardware" (the trace-driven pipeline in
+:mod:`repro.core.amc.prefetcher`).
+
+    sess = AMCSession()
+    sess.init(asid=0)                      # AMC.init()
+    sess.addr_t_base(t_base, t_size)       # AMC.AddrTBase(addr, size)
+    sess.addr_f_base(f_base, f_size)       # AMC.AddrFBase(addr, size)
+    ... per iteration ...
+    sess.update()                          # AMC.update()  (role swap)
+    sess.end()                             # AMC.end()
+
+The evolving-graph drivers (examples/, benchmarks/) call these around the
+Ligra loops exactly as the paper's Algorithm 1 does for PGD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class _ArchRegisters:
+    """The architectural state of §IV-A."""
+
+    asid: Optional[int] = None
+    target_base: Optional[int] = None
+    target_size: int = 0
+    target_elem_size: int = 8
+    frontier_base: Optional[int] = None
+    frontier_size: int = 0
+    frontier_elem_size: int = 1
+    prefetch_phase: bool = False  # set after the initial iteration
+    target_access_count: int = 0
+    miss_count: int = 0
+
+
+class AMCSession:
+    """Host-side owner of AMC architectural registers + metadata spaces."""
+
+    def __init__(self):
+        self.regs = _ArchRegisters()
+        self.active = False
+        self.iteration = 0
+        self._ended = False
+
+    # --- Table V calls ---
+
+    def init(self, asid: int = 0) -> None:
+        """Set ASID for permission checks, allocate AMC storage."""
+        self.regs = _ArchRegisters(asid=asid)
+        self.active = True
+        self._ended = False
+        self.iteration = 0
+
+    def addr_t_base(self, addr: int, size: int, elem_size: int = 8) -> None:
+        assert self.active, "AMC.init() first"
+        self.regs.target_base = int(addr)
+        self.regs.target_size = int(size)
+        self.regs.target_elem_size = int(elem_size)
+
+    def addr_f_base(self, addr: int, size: int, elem_size: int = 1) -> None:
+        assert self.active, "AMC.init() first"
+        self.regs.frontier_base = int(addr)
+        self.regs.frontier_size = int(size)
+        self.regs.frontier_elem_size = int(elem_size)
+
+    def update(self) -> None:
+        """Iteration boundary: enable prefetching, swap metadata roles,
+        reset the target access counter."""
+        assert self.active
+        self.regs.prefetch_phase = True
+        self.regs.target_access_count = 0
+        self.regs.miss_count = 0
+        self.iteration += 1
+
+    def end(self) -> None:
+        """Free AMC storage, reset registers, invalidate AMC Cache."""
+        self.active = False
+        self._ended = True
+        self.regs = _ArchRegisters()
+
+    # --- helpers used by the tracer/driver ---
+
+    def in_target_range(self, addr) -> bool:
+        r = self.regs
+        if r.target_base is None:
+            return False
+        return r.target_base <= addr < r.target_base + r.target_size
+
+    def in_frontier_range(self, addr) -> bool:
+        r = self.regs
+        if r.frontier_base is None:
+            return False
+        return r.frontier_base <= addr < r.frontier_base + r.frontier_size
+
+    def address_calculation(self, frontier_addr: int) -> int:
+        """§V-C2: target_delta = frontier_delta * (target_size/frontier_size)."""
+        r = self.regs
+        fdelta = frontier_addr - r.frontier_base
+        return r.target_base + fdelta * (r.target_elem_size // r.frontier_elem_size)
+
+    @property
+    def configured(self) -> bool:
+        return (
+            self.active
+            and self.regs.target_base is not None
+            and self.regs.frontier_base is not None
+        )

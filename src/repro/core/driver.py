@@ -1,0 +1,254 @@
+"""Workload driver: app -> trace -> composite simulation -> metrics.
+
+One :class:`WorkloadTrace` per (kernel, dataset) bundles the full access
+trace, the shared demand profile, and the composite *baseline run* (demand +
+next-line, per the paper's Table VI L2). Prefetchers consume it through
+``amc_iteration_views()`` (AMC) or the raw substream accessors (baselines),
+and ``run_prefetcher_suite`` scores each against the baseline run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.apps import KERNELS, trace_app_run
+from repro.apps.ligra import AppRun
+from repro.apps.trace import F_ID, T_ID, TraceConfig, concat_traces
+from repro.core.amc.api import AMCSession
+from repro.core.amc.prefetcher import IterationView, PrefetchStream
+from repro.graphs import make_dataset, make_evolving_pair
+from repro.memsim import (
+    SCALED,
+    DemandProfile,
+    HierarchyConfig,
+    PrefetchMetrics,
+    evaluate,
+    simulate_demand,
+    simulate_with_prefetch,
+)
+from repro.memsim.config import BLOCK_BITS
+from repro.memsim.hierarchy import PrefetchOutcome
+
+# Kernels evaluated on the two-run evolving protocol (§VI).
+TWO_RUN_KERNELS = ("bfs", "bellmanford")
+
+
+@dataclasses.dataclass
+class WorkloadTrace:
+    kernel: str
+    dataset: str
+    cfg_trace: TraceConfig
+    block: np.ndarray
+    array_id: np.ndarray
+    epoch_id: np.ndarray  # AMC epoch per access
+    iter_id: np.ndarray  # global iteration per access
+    elem: np.ndarray
+    iter_epochs: List[Tuple[int, int]]  # per global iteration: (epoch, within)
+    profile: DemandProfile
+    nl_blocks: np.ndarray
+    nl_pos: np.ndarray
+    nl_outcome: PrefetchOutcome  # the baseline run (demand + next-line)
+    eval_from_pos: int
+    session: AMCSession
+
+    @property
+    def input_bytes(self) -> int:
+        return self.cfg_trace.input_bytes
+
+    @property
+    def num_accesses(self) -> int:
+        return len(self.block)
+
+    # ---- composite-baseline L2 miss stream (recording ground truth) ----
+
+    def baseline_miss_stream(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        sel = ~self.nl_outcome.demand_l2_hit
+        pos = self.profile.l2_pos[sel]
+        blocks = self.profile.l2_blocks[sel]
+        iters = self.iter_id[pos]
+        return pos, blocks, iters
+
+    def amc_iteration_views(self):
+        """Yield (IterationView, epoch) in iteration order for AMC."""
+        t_base, t_size = self.cfg_trace.target_range
+        t_lo, t_hi = t_base >> BLOCK_BITS, (t_base + t_size) >> BLOCK_BITS
+        mpos, mblocks, miters = self.baseline_miss_stream()
+        not_target = ~((mblocks >= t_lo) & (mblocks <= t_hi))
+        mpos, mblocks, miters = (
+            mpos[not_target],
+            mblocks[not_target],
+            miters[not_target],
+        )
+        tmask = self.array_id == T_ID
+        tpos_all = np.flatnonzero(tmask)
+        titer = self.iter_id[tpos_all]
+        tvid = self.elem[tpos_all]
+        views = []
+        for it, (epoch, within) in enumerate(self.iter_epochs):
+            ts = titer == it
+            ms = miters == it
+            views.append(
+                (
+                    IterationView(
+                        iteration=it,
+                        within_epoch=within,
+                        target_pos=tpos_all[ts],
+                        target_vid=tvid[ts],
+                        miss_pos=mpos[ms],
+                        miss_blocks=mblocks[ms],
+                    ),
+                    epoch,
+                )
+            )
+        return views
+
+    # ---- L2 access substream view for the baseline prefetchers ----
+
+    def l2_stream(self):
+        """(pos, blocks, array_id, epoch) of L2 accesses (= L1 misses)."""
+        p = self.profile
+        return p.l2_pos, p.l2_blocks, self.array_id[p.l2_pos], self.epoch_id[p.l2_pos]
+
+
+def _nextline_stream(profile: DemandProfile):
+    """Degree-1 next-line at L2, trained on L2 accesses; consecutive
+    same-line triggers filtered (standard)."""
+    b = profile.l2_blocks
+    p = profile.l2_pos
+    if len(b) == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    keep = np.ones(len(b), dtype=bool)
+    keep[1:] = b[1:] != b[:-1]
+    return b[keep] + 1, p[keep]
+
+
+def _run_app(kernel: str, dataset: str, seed: int = 0):
+    """Run the kernel per the paper's protocol; returns (runs, epoch_of_iter)."""
+    fn = KERNELS[kernel]
+    weighted = kernel == "bellmanford"
+    g = make_dataset(dataset, weighted=weighted)
+    if kernel in TWO_RUN_KERNELS:
+        from repro.apps.bfs import pick_root
+
+        pair = make_evolving_pair(g, seed=seed)
+        # Same root for both runs so the traversals correlate (the paper's
+        # BFS caveat: "if the parent node gets changed, the whole graph
+        # traversal changes").
+        root = pick_root(pair.run1, pair.mask1 & pair.mask2)
+        r1 = fn(pair.run1, present_mask=pair.mask1, root=root)
+        r2 = fn(pair.run2, present_mask=pair.mask2, root=root)
+        return [r1, r2]
+    return [fn(g)]
+
+
+def build_workload(
+    kernel: str,
+    dataset: str,
+    hierarchy: HierarchyConfig = SCALED,
+    seed: int = 0,
+    runs: Optional[List[AppRun]] = None,
+) -> WorkloadTrace:
+    runs = runs if runs is not None else _run_app(kernel, dataset, seed)
+    # Shared address layout across runs (same id space - evolve.py keeps it).
+    g = runs[0].graph
+    cfg_trace = TraceConfig(
+        num_vertices=g.num_vertices,
+        num_edges=max(r.graph.num_edges for r in runs),
+    )
+
+    all_traces = []
+    iter_epochs: List[Tuple[int, int]] = []
+    git = 0
+    run_start_iter = []
+    for run_idx, run in enumerate(runs):
+        traces = trace_app_run(run, cfg_trace)
+        run_start_iter.append(git)
+        for k, t in enumerate(traces):
+            t.iteration = git  # globalize
+            if kernel in TWO_RUN_KERNELS:
+                iter_epochs.append((run_idx, k))
+            else:
+                iter_epochs.append((git, 0))
+            git += 1
+        all_traces.extend(traces)
+
+    block, array_id, iter_id, elem = concat_traces(all_traces)
+    epoch_id = np.asarray([iter_epochs[i][0] for i in range(git)], dtype=np.int32)[
+        iter_id
+    ]
+
+    profile = simulate_demand(block, iter_id, hierarchy)
+    nl_blocks, nl_pos = _nextline_stream(profile)
+    nl_outcome = simulate_with_prefetch(
+        profile, nl_blocks, nl_pos, pf_issuer=np.zeros(len(nl_blocks), np.int8)
+    )
+
+    eval_from = 0
+    if kernel in TWO_RUN_KERNELS and len(runs) > 1:
+        # Evaluate on the second (post-change) run only.
+        second_first_iter = run_start_iter[1]
+        eval_from = int(np.searchsorted(iter_id, second_first_iter))
+
+    # Programming-model session, configured exactly as Algorithm 1 does.
+    sess = AMCSession()
+    sess.init(asid=0)
+    t_base, t_size = cfg_trace.target_range
+    f_base, f_size = cfg_trace.frontier_range
+    sess.addr_t_base(t_base, t_size, elem_size=8)
+    sess.addr_f_base(f_base, f_size, elem_size=1)
+
+    return WorkloadTrace(
+        kernel=kernel,
+        dataset=dataset,
+        cfg_trace=cfg_trace,
+        block=block,
+        array_id=array_id,
+        epoch_id=epoch_id,
+        iter_id=iter_id,
+        elem=elem,
+        iter_epochs=iter_epochs,
+        profile=profile,
+        nl_blocks=nl_blocks,
+        nl_pos=nl_pos,
+        nl_outcome=nl_outcome,
+        eval_from_pos=eval_from,
+        session=sess,
+    )
+
+
+def run_prefetcher_suite(
+    workload: WorkloadTrace,
+    prefetchers: Dict[str, Callable[[WorkloadTrace], PrefetchStream]],
+) -> Dict[str, PrefetchMetrics]:
+    """Run each prefetcher in the composite (next-line + X) configuration."""
+    results: Dict[str, PrefetchMetrics] = {}
+    for name, gen in prefetchers.items():
+        stream = gen(workload)
+        blocks = np.concatenate([workload.nl_blocks, stream.blocks])
+        pos = np.concatenate([workload.nl_pos, stream.pos])
+        issuer = np.concatenate(
+            [
+                np.zeros(len(workload.nl_blocks), np.int8),
+                np.ones(len(stream.blocks), np.int8),
+            ]
+        )
+        outcome = simulate_with_prefetch(
+            workload.profile,
+            blocks,
+            pos,
+            pf_issuer=issuer,
+            metadata_bytes=stream.metadata_bytes,
+        )
+        m = evaluate(
+            name,
+            workload.profile,
+            outcome,
+            baseline_outcome=workload.nl_outcome,
+            eval_from_pos=workload.eval_from_pos,
+            issuer=1,
+        )
+        m.info = stream.info  # attach prefetcher-side stats
+        results[name] = m
+    return results

@@ -1,0 +1,40 @@
+"""Baseline prefetchers evaluated against AMC (paper Table I / §VII).
+
+All are L2 prefetchers trained on the L2 access stream (= L1 misses), as in
+the paper ("trained on L1 data cache access/miss and assigned as L2
+prefetcher"), except RnR which trains on L2 misses at L2. PC localization
+uses the accessing array id — exactly the paper's Table II model, where PCs
+A/B/C map to the V/N/P arrays.
+
+Online learning is modeled *epoch-causally*: epoch k's predictions use
+tables trained on epochs < k (spatial prefetchers additionally warm up
+within-epoch). This slightly favors the baselines (instant table
+convergence), which is conservative for AMC's relative claims.
+"""
+from repro.core.prefetchers.simple import nextline_extra, droplet_model, ideal_l2
+from repro.core.prefetchers.temporal import isb, misb, domino
+from repro.core.prefetchers.spatial import vldp, bingo
+from repro.core.prefetchers.rnr import rnr
+
+SUITE = {
+    "vldp": vldp,
+    "bingo": bingo,
+    "isb": isb,
+    "misb": misb,
+    "rnr": rnr,
+    "domino": domino,
+    "prodigy": droplet_model,
+}
+
+__all__ = [
+    "nextline_extra",
+    "droplet_model",
+    "ideal_l2",
+    "isb",
+    "misb",
+    "domino",
+    "vldp",
+    "bingo",
+    "rnr",
+    "SUITE",
+]

@@ -1,0 +1,4 @@
+"""Data pipeline."""
+from repro.data.pipeline import SyntheticLMData, make_batch_iterator
+
+__all__ = ["SyntheticLMData", "make_batch_iterator"]

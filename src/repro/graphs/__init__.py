@@ -1,0 +1,35 @@
+"""Graph substrate: CSR graphs, synthetic generators, evolving-graph dynamics.
+
+The paper evaluates evolving (dynamic) graph analytics on SNAP datasets.
+Offline we synthesize graphs whose *shape statistics* (vertex count, average
+degree, degree skew, diameter class) mirror the paper's Table VII inputs at a
+reduced scale, and reproduce the paper's dynamics protocol (Section VI):
+run-1 on a random 80%-vertex induced subgraph, run-2 after deleting 10% of
+run-1's vertices and adding 10% fresh ones.
+"""
+from repro.graphs.csr import CSRGraph, build_csr, from_edges
+from repro.graphs.generators import (
+    rmat_graph,
+    powerlaw_graph,
+    road_graph,
+    make_dataset,
+    DATASETS,
+)
+from repro.graphs.evolve import EvolvingGraphPair, make_evolving_pair, induced_subgraph
+from repro.graphs.partition import partition_contiguous, bfs_reorder
+
+__all__ = [
+    "CSRGraph",
+    "build_csr",
+    "from_edges",
+    "rmat_graph",
+    "powerlaw_graph",
+    "road_graph",
+    "make_dataset",
+    "DATASETS",
+    "EvolvingGraphPair",
+    "make_evolving_pair",
+    "induced_subgraph",
+    "partition_contiguous",
+    "bfs_reorder",
+]

@@ -1,0 +1,141 @@
+"""Compressed-sparse-row graph container used by every app and the tracer.
+
+Layout matches the paper's Fig 3 data-structure model:
+  V (offsets)   -- vertex array: CSR row pointers, one slot per vertex (+1)
+  N (neighbors) -- edge array: destination vertex ids, CSR order
+  P (property)  -- per-vertex property array (rank / distance / component)
+  F (frontier)  -- per-vertex bitmap of active vertices
+
+Arrays are plain ``numpy`` on the host (graph construction is host-side data
+plumbing) and are exported to ``jnp`` device arrays once via
+:meth:`CSRGraph.device` for the JAX apps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+try:  # JAX is required by the apps; csr itself stays importable without it.
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jnp = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Immutable CSR graph. ``offsets`` has length n+1; ``neighbors`` length m."""
+
+    offsets: np.ndarray  # int64 (n+1,)
+    neighbors: np.ndarray  # int32 (m,)
+    weights: Optional[np.ndarray] = None  # float32 (m,) for BellmanFord
+    name: str = "graph"
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.offsets.shape[0] - 1)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.neighbors.shape[0])
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    @property
+    def avg_degree(self) -> float:
+        n = max(self.num_vertices, 1)
+        return self.num_edges / n
+
+    def edge_sources(self) -> np.ndarray:
+        """Expand CSR rows to a per-edge source array (int32, length m)."""
+        return np.repeat(
+            np.arange(self.num_vertices, dtype=np.int32), self.degrees
+        )
+
+    def device(self):
+        """Return (offsets, neighbors, weights, edge_src) as jnp arrays."""
+        assert jnp is not None, "jax not available"
+        w = self.weights
+        if w is None:
+            w = np.ones(self.num_edges, dtype=np.float32)
+        return (
+            jnp.asarray(self.offsets),
+            jnp.asarray(self.neighbors),
+            jnp.asarray(w),
+            jnp.asarray(self.edge_sources()),
+        )
+
+    def validate(self) -> None:
+        n, m = self.num_vertices, self.num_edges
+        assert self.offsets[0] == 0 and self.offsets[-1] == m
+        assert np.all(np.diff(self.offsets) >= 0), "offsets must be monotone"
+        if m:
+            assert self.neighbors.min() >= 0 and self.neighbors.max() < n
+        if self.weights is not None:
+            assert self.weights.shape == (m,)
+
+
+def from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    num_vertices: int,
+    weights: Optional[np.ndarray] = None,
+    dedup: bool = True,
+    name: str = "graph",
+) -> CSRGraph:
+    """Build a CSR graph from an edge list (drops self loops, dedups)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if weights is not None:
+        weights = np.asarray(weights, dtype=np.float32)[keep]
+    if dedup and len(src):
+        key = src * num_vertices + dst
+        order = np.argsort(key, kind="stable")
+        key = key[order]
+        uniq = np.ones(len(key), dtype=bool)
+        uniq[1:] = key[1:] != key[:-1]
+        src, dst = src[order][uniq], dst[order][uniq]
+        if weights is not None:
+            weights = weights[order][uniq]
+    else:
+        order = np.argsort(src, kind="stable")
+        src, dst = src[order], dst[order]
+        if weights is not None:
+            weights = weights[order]
+    counts = np.bincount(src, minlength=num_vertices).astype(np.int64)
+    offsets = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    g = CSRGraph(
+        offsets=offsets,
+        neighbors=dst.astype(np.int32),
+        weights=weights,
+        name=name,
+    )
+    g.validate()
+    return g
+
+
+def build_csr(edges: np.ndarray, num_vertices: int, **kw) -> CSRGraph:
+    """Convenience: edges is an (m, 2) array."""
+    return from_edges(edges[:, 0], edges[:, 1], num_vertices, **kw)
+
+
+def symmetrize(g: CSRGraph) -> CSRGraph:
+    """Return the undirected version of ``g`` (both edge directions)."""
+    src = g.edge_sources()
+    dst = g.neighbors.astype(np.int64)
+    w = g.weights
+    if w is not None:
+        w = np.concatenate([w, w])
+    return from_edges(
+        np.concatenate([src, dst]),
+        np.concatenate([dst, src]),
+        g.num_vertices,
+        weights=w,
+        name=g.name + "+sym",
+    )

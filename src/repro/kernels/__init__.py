@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  flash_attn  -- blocked attention (MXU tiles, online softmax) for the
+                 prefill_32k cells
+  amc_gather  -- the paper's technique on TPU: recorded-index-stream gather
+                 with double-buffered HBM->VMEM pipelining (DESIGN.md §2.2)
+  basedelta   -- BaseΔ compression of recorded index/miss streams (Fig 5/6)
+  ssd_scan    -- Mamba2 SSD chunk kernel (intra-chunk MXU matmuls + carried
+                 state) for the ssm/hybrid archs
+
+Each kernel ships with ``ops.py`` (jitted wrapper with shape plumbing) and
+``ref.py`` (pure-jnp oracle); tests sweep shapes/dtypes in interpret mode
+(this container is CPU-only; TPU is the *target*).
+"""

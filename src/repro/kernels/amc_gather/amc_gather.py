@@ -1,0 +1,112 @@
+"""AMC recorded-stream gather kernel — the paper's mechanism, TPU-native.
+
+The CPU prefetcher records "the misses that follow a target access" and
+replays them one iteration later. On TPU the memory system is software
+managed, so the analogue is: the *gather index stream recorded in iteration
+k* drives HBM->VMEM row DMA for iteration k+1 *ahead of use* (DESIGN.md
+§2.2 table). Pallas expresses exactly this: the recorded index stream is a
+scalar-prefetch operand, and each grid step's input BlockSpec ``index_map``
+selects the next recorded row — the pipeline emitter double-buffers the row
+DMA against the previous step's compute, which IS the prefetch.
+
+Grid: one step per index block. The index stream lives in SMEM (scalar
+prefetch); rows stream through VMEM tiles of (block_rows, row_width).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, table_ref, out_ref, *, block_rows: int):
+    # table_ref block: (block_rows, D) rows selected by the index_map —
+    # i.e. the DMA already fetched the recorded rows; just write through.
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret")
+)
+def amc_gather(
+    table: jnp.ndarray,  # (V, D) vertex-property rows in HBM
+    indices: jnp.ndarray,  # (N,) int32 recorded miss/index stream
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gather ``table[indices]`` with recorded-stream pipelining.
+
+    The row dimension is blocked one row per grid step within a
+    ``block_rows``-wide super-step; the scalar-prefetched ``indices`` feed
+    the table BlockSpec's index_map so the Pallas pipeline issues each row's
+    DMA one step ahead (double buffering) — the AMC replay.
+    """
+    n = indices.shape[0]
+    v, d = table.shape
+    grid = (n,)
+
+    def table_index_map(i, idx_ref):
+        return (idx_ref[i], 0)
+
+    def out_index_map(i, idx_ref):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, d), table_index_map)],
+        out_specs=pl.BlockSpec((1, d), out_index_map),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, block_rows=block_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), table)
+
+
+def _gather_accum_kernel(idx_ref, seg_ref, table_ref, out_ref, acc_ref):
+    """Gather + segment-sum: the push-mode edgeMap consumer (nghSum)."""
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += table_ref[...].astype(jnp.float32)
+
+    @pl.when((i == n - 1) | (seg_ref[i] != seg_ref[jnp.minimum(i + 1, n - 1)]))
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def amc_gather_segment_sum(
+    table: jnp.ndarray,  # (V, D)
+    indices: jnp.ndarray,  # (N,) recorded gather stream
+    segments: jnp.ndarray,  # (N,) non-decreasing destination segment ids
+    num_segments: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """out[s] = sum_{i: segments[i]=s} table[indices[i]] (frontier push)."""
+    n = indices.shape[0]
+    v, d = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, idx, seg: (idx[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx, seg: (seg[i], 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _gather_accum_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), table.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), segments.astype(jnp.int32), table)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the AMC gather kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_ref(table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    return table[indices]
+
+
+def gather_segment_sum_ref(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    segments: jnp.ndarray,
+    num_segments: int,
+) -> jnp.ndarray:
+    rows = table[indices].astype(jnp.float32)
+    out = jax.ops.segment_sum(rows, segments, num_segments=num_segments)
+    return out.astype(table.dtype)

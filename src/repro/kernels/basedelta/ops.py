@@ -1,0 +1,74 @@
+"""Wrapper: compress/roundtrip AMC entry tables through the tile kernels.
+
+Block-line ids in this system fit int32 (46-bit physical addresses in the
+paper map to <2^26 line ids at our scale); the 46-bit base is carried
+exactly on the host side, the kernel handles the delta lanes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.basedelta.basedelta import (
+    basedelta_compress_tiles,
+    basedelta_decompress_tiles,
+)
+
+MODE_BYTES = np.array([1, 2, 4, 8])
+
+
+def pack_ragged(miss_blocks: np.ndarray, offsets: np.ndarray, width: int = 32):
+    """Ragged entries -> fixed (E, width) tiles + counts (host-side I/O).
+
+    Entries must fit the tile width — the AMC binder splits at 20 misses
+    (paper Fig 16), so width 32 always holds."""
+    e = len(offsets) - 1
+    counts = np.diff(offsets).astype(np.int32)
+    assert counts.max(initial=0) <= width, (
+        f"entry of {counts.max()} misses exceeds tile width {width}; "
+        "split entries first (AMC caps at 20)"
+    )
+    tiles = np.zeros((e, width), np.int32)
+    rows = np.repeat(np.arange(e), counts)
+    lanes = np.arange(len(rows)) - np.repeat(offsets[:-1], counts) + np.repeat(
+        offsets[:-1] - offsets[:-1], counts
+    )
+    # per-row lane index
+    lane_start = np.zeros(e, np.int64)
+    np.cumsum(counts[:-1], out=lane_start[1:])
+    lanes = np.arange(int(counts.sum())) - np.repeat(lane_start, counts)
+    src = np.concatenate(
+        [miss_blocks[offsets[i] : offsets[i] + counts[i]] for i in range(e)]
+    ) if e else np.zeros(0, np.int64)
+    tiles[rows, lanes] = src.astype(np.int32)
+    return tiles, counts
+
+
+def compress_entries(
+    miss_blocks: np.ndarray, offsets: np.ndarray, width: int = 32, interpret=True
+):
+    """Returns (bases, deltas, modes, counts, compressed_bytes)."""
+    tiles, counts = pack_ragged(miss_blocks, offsets, width)
+    deltas, modes = basedelta_compress_tiles(
+        jnp.asarray(tiles), jnp.asarray(counts), interpret=interpret
+    )
+    modes_np = np.asarray(modes)
+    nbytes = 7 + np.maximum(counts - 1, 0) * MODE_BYTES[modes_np]
+    return tiles[:, 0], np.asarray(deltas), modes_np, counts, int(nbytes.sum())
+
+
+def roundtrip(miss_blocks: np.ndarray, offsets: np.ndarray, width=32, interpret=True):
+    """Compress + decompress; returns the reconstructed ragged stream."""
+    base, deltas, modes, counts, _ = compress_entries(
+        miss_blocks, offsets, width, interpret
+    )
+    rec = np.asarray(
+        basedelta_decompress_tiles(
+            jnp.asarray(base), jnp.asarray(deltas), interpret=interpret
+        )
+    )
+    if not len(counts):
+        return np.zeros(0, np.int64)
+    return np.concatenate(
+        [rec[i, : counts[i]] for i in range(len(counts))]
+    ).astype(np.int64)

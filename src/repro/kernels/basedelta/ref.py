@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the BaseΔ tile kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compress_ref(blocks: jnp.ndarray, counts: jnp.ndarray):
+    e, w = blocks.shape
+    lane = jnp.arange(w)[None, :]
+    valid = lane < counts[:, None]
+    base = blocks[:, 0:1]
+    deltas = jnp.where(valid, blocks - base, 0).astype(jnp.int32)
+    absmax = jnp.max(jnp.abs(deltas), axis=1)
+    mode = jnp.where(
+        absmax <= 127,
+        0,
+        jnp.where(absmax <= 32767, 1, jnp.where(absmax <= 2**31 - 1, 2, 3)),
+    ).astype(jnp.int32)
+    return deltas, mode
+
+
+def decompress_ref(base: jnp.ndarray, deltas: jnp.ndarray) -> jnp.ndarray:
+    return (base[:, None] + deltas).astype(jnp.int32)

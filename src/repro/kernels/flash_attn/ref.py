@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (BH, Sq, hd)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    hd = q.shape[-1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd**-0.5)
+    sq, skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if sliding_window:
+        mask &= k_pos > q_pos - sliding_window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

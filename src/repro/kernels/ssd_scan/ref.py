@@ -1,0 +1,42 @@
+"""Oracle: the model stack's chunked SSD (itself tested against a naive
+sequential recurrence in tests/test_ssm.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, a, b, c, chunk=128):
+    """Same layout as the kernel: (BH, S, P) x per-BH scalar a."""
+    bh, s, p = x.shape
+    # route through ssd_chunked with H=1 per (batch*head) slice
+    outs = []
+    for i in range(bh):
+        y, _ = ssd_chunked(
+            x[i][None, :, None, :],  # (1, S, 1, P)
+            dt[i][None, :, None],  # (1, S, 1)
+            a[i][None],  # (1,)
+            b[i][None],  # (1, S, N)
+            c[i][None],
+            chunk=chunk,
+        )
+        outs.append(y[0, :, 0])
+    return jnp.stack(outs)
+
+
+def ssd_naive(x, dt, a, b, c):
+    """O(S) sequential recurrence, the ground truth for both."""
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    y = np.zeros((bh, s, p), np.float32)
+    for i in range(bh):
+        state = np.zeros((p, n), np.float32)
+        for t in range(s):
+            decay = np.exp(float(dt[i, t]) * float(a[i]))
+            state = state * decay + np.outer(
+                x[i, t] * dt[i, t], b[i, t]
+            )
+            y[i, t] = state @ np.asarray(c[i, t])
+    return y

@@ -1,0 +1,95 @@
+"""Mamba2 SSD chunk kernel (TPU target, interpret-validated).
+
+One grid step per (batch*head, chunk). The inter-chunk recurrent state
+(P x N, float32) lives in VMEM scratch and is carried across the chunk
+dimension (innermost grid axis), so the kernel computes
+
+  intra:  Y = ((C Bᵀ) ⊙ decay ⊙ causal) · (dt ⊙ X)       (MXU matmuls)
+  state:  S' = S * seg_decay + Bᵀ · (w ⊙ X)
+  inter:  Y += (C · S) ⊙ in_decay
+
+matching :func:`repro.models.ssm.ssd_chunked` (the oracle) exactly.
+Chunk length and head dim are the MXU-facing tile dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (L, 1)
+    a = a_ref[0, 0]  # scalar decay rate for this head
+    b = b_ref[0].astype(jnp.float32)  # (L, N)
+    c = c_ref[0].astype(jnp.float32)  # (L, N)
+
+    da = dt[:, 0] * a  # (L,)
+    cum = jnp.cumsum(da)  # within-chunk cumulative log decay
+    # intra-chunk
+    decay = jnp.exp(cum[:, None] - cum[None, :])  # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = (li >= lj).astype(jnp.float32)
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (L, L)
+    w = cb * decay * causal
+    xdt = x * dt  # (L, P)
+    y = jnp.dot(w, xdt, preferred_element_type=jnp.float32)
+    # inter-chunk: contribution of incoming state
+    state = state_scr[...]  # (P, N)
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        c, state.T, preferred_element_type=jnp.float32
+    )
+    # state update
+    sw = jnp.exp(cum[-1] - cum) * dt[:, 0]  # (L,)
+    new_contrib = jnp.dot((x * sw[:, None]).T, b, preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(cum[-1]) + new_contrib
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,  # (BH, S, P)
+    dt: jnp.ndarray,  # (BH, S)
+    a: jnp.ndarray,  # (BH,)
+    b: jnp.ndarray,  # (BH, S, N)
+    c: jnp.ndarray,  # (BH, S, N)
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, 1), lambda h, i: (h, 0)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda h, i: (h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nc * chunk, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt[..., None], a[:, None], b, c)
+    return out[:, :s]

@@ -1,0 +1,155 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as its own process (``python -m repro.launch.dryrun``) so
+the XLA_FLAGS above take effect before jax initializes. Emits one JSON per
+cell under results/dryrun/ with memory analysis, cost analysis, and the
+collective-bytes breakdown the roofline reads.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm_360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, cell_supported, get_config  # noqa: E402
+from repro.launch.hlo_analysis import collective_bytes  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_num_devices  # noqa: E402
+from repro.launch.steps import cell_step_and_specs  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path):
+        print(f"[skip] {tag}")
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _dump(path, rec)
+        print(f"[skipped-by-design] {tag}: {why}")
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        step, in_specs, in_shardings = cell_step_and_specs(cfg, shape, mesh)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=in_shardings)
+            lowered = jitted.lower(*in_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            try:
+                hlo = compiled.as_text()
+            except Exception:
+                hlo = lowered.as_text()
+            coll = collective_bytes(hlo)
+
+        n_dev = mesh_num_devices(mesh)
+        rec.update(
+            status="ok",
+            devices=n_dev,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops=float(cost.get("flops", -1)) if cost else -1,
+            bytes_accessed=float(cost.get("bytes accessed", -1)) if cost else -1,
+            memory=_mem_dict(mem),
+            collectives=coll,
+            param_count=cfg.param_count(),
+            active_param_count=cfg.active_param_count(),
+        )
+        print(
+            f"[ok] {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s "
+            f"flops={rec['flops']:.3g} coll={coll['total_bytes']:.3g}B"
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}"[:2000])
+        traceback.print_exc()
+        print(f"[ERROR] {tag}: {e}")
+    _dump(path, rec)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    keys = (
+        "generated_code_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _dump(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        f"dry-run needs 512 emulated devices, got {len(jax.devices())}; "
+        "run as a fresh process"
+    )
+
+    cells = []
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            if not args.multi_pod_only:
+                cells.append((a, s, False))
+            if not args.single_pod_only:
+                cells.append((a, s, True))
+    if args.multi_pod and not args.all and args.arch:
+        cells = [(args.arch, s, True) for s in shapes]
+
+    for a, s, mp in cells:
+        run_cell(a, s, mp, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""HLO text analysis: collective byte counting for the roofline.
+
+``cost_analysis()`` has FLOPs and memory bytes but not collective traffic;
+we parse the (compiled or lowered) HLO text and sum the result-shape bytes
+of every collective op, bucketed by op kind.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, dict]:
+    """Per-collective-kind {count, bytes} from HLO text.
+
+    Bytes are the op's result-shape bytes — the payload that crosses links
+    (for all-gather this is the gathered size; for reduce-scatter the
+    scattered size; a per-kind link-traffic factor is applied in the
+    roofline, not here).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in COLLECTIVES:
+            token = f" {kind}("
+            idx = line.find(token)
+            if idx < 0:
+                # fused/start variants: all-reduce-start(
+                token = f" {kind}-start("
+                idx = line.find(token)
+                if idx < 0:
+                    continue
+            lhs = line[:idx]
+            if "=" not in lhs:
+                continue
+            result_seg = lhs.split("=", 1)[1]
+            b = _shape_bytes(result_seg)
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += b
+            break
+    out["total_bytes"] = sum(
+        v["bytes"] for k, v in out.items() if isinstance(v, dict)
+    )
+    return out

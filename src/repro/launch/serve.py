@@ -1,0 +1,74 @@
+"""Serving launcher: batched prefill + decode with KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm_360m --reduced \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import init_cache, init_params
+from repro.runtime import ElasticMesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    mesh = ElasticMesh(model_parallel=args.model_parallel).build()
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    serve_step = jax.jit(make_serve_step(cfg))
+
+    with mesh:
+        rng = np.random.default_rng(args.seed)
+        max_len = args.prompt_len + args.gen + 1
+        cache = init_cache(cfg, args.batch, max_len)
+        tok = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, 1)), jnp.int32
+        )
+        # prefill modeled as sequential decode of the prompt (exercises the
+        # same cache path; a fused prefill_step exists for the dry-run cells)
+        t0 = time.time()
+        for i in range(args.prompt_len):
+            nxt = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (args.batch, 1)), jnp.int32
+            )
+            _, cache = serve_step(params, tok, cache)
+            tok = nxt
+        t_prefill = time.time() - t0
+
+        outs = []
+        t0 = time.time()
+        for i in range(args.gen):
+            tok, cache = serve_step(params, tok, cache)
+            outs.append(np.asarray(tok))
+        t_gen = time.time() - t0
+        gen = np.concatenate(outs, axis=1)
+        tps = args.batch * args.gen / max(t_gen, 1e-9)
+        print(f"prefill {args.prompt_len} toks: {t_prefill:.2f}s")
+        print(f"decode  {args.gen} toks x {args.batch} seqs: {t_gen:.2f}s ({tps:.1f} tok/s)")
+        print("sample:", gen[0, :16].tolist())
+        assert np.isfinite(gen).all()
+        return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct input stands-ins for every (arch x shape) cell.
+
+``input_specs`` mirrors the pattern used by shannon/kernels: weak-type-
+correct, shardable, zero device allocation. The dry-run lowers
+train/prefill/decode step functions against these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import init_cache, init_params, padded_vocab
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+SDS = jax.ShapeDtypeStruct
+
+
+def params_spec(cfg: ModelConfig) -> Any:
+    """Shape pytree of the parameters (eval_shape over init)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def opt_state_spec(cfg: ModelConfig, pspec) -> Any:
+    ocfg = AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    return jax.eval_shape(lambda p: adamw_init(p, ocfg), pspec)
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    spec: Dict[str, Any] = {"labels": SDS((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        spec["tokens"] = SDS((b, s), jnp.int32)
+        spec["frames"] = SDS((b, s, cfg.d_model), jnp.bfloat16)  # audio stub
+    elif cfg.family == "vlm":
+        spec["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)  # patch stub
+        spec["positions3"] = SDS((b, 3, s), jnp.int32)
+    else:
+        spec["tokens"] = SDS((b, s), jnp.int32)
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def decode_tokens_spec(shape: ShapeConfig):
+    return SDS((shape.global_batch, 1), jnp.int32)

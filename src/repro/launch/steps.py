@@ -1,0 +1,100 @@
+"""Step builders: train_step / prefill_step / serve_step with shardings.
+
+These are what the dry-run lowers and what train.py/serve.py execute.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import specs
+from repro.models import (
+    batch_shardings,
+    cache_shardings,
+    decode_step,
+    forward,
+    loss_fn,
+    params_shardings,
+)
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
+
+
+def make_train_step(cfg: ModelConfig, ocfg: Optional[AdamWConfig] = None):
+    ocfg = ocfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return loss_fn(cfg, p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        lr_scale = cosine_schedule(opt_state["step"])
+        new_params, new_state = adamw_update(params, grads, opt_state, ocfg, lr_scale)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _, cache = forward(
+            cfg,
+            params,
+            batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            positions3=batch.get("positions3"),
+            encoder_frames=batch.get("frames"),
+            return_cache=True,
+        )
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, seq_sharded: bool = False):
+    def serve_step(params, tokens, cache):
+        logits, cache = decode_step(
+            cfg, params, tokens, cache, mesh=mesh, seq_sharded=seq_sharded
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def cell_step_and_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+) -> Tuple[Any, tuple, tuple]:
+    """(step_fn, in_specs, in_shardings) for one (arch x shape x mesh) cell."""
+    pspec = specs.params_spec(cfg)
+    pshard = params_shardings(cfg, mesh, pspec)
+    if shape.mode == "train":
+        ospec = specs.opt_state_spec(cfg, pspec)
+        oshard = {
+            "m": params_shardings(cfg, mesh, ospec["m"]),
+            "v": params_shardings(cfg, mesh, ospec["v"]),
+            "step": NamedSharding(mesh, P()),
+        }
+        bspec = specs.batch_spec(cfg, shape)
+        bshard = batch_shardings(cfg, mesh, bspec)
+        step = make_train_step(cfg)
+        return step, (pspec, ospec, bspec), (pshard, oshard, bshard)
+    if shape.mode == "prefill":
+        bspec = specs.batch_spec(cfg, shape)
+        bspec.pop("labels")
+        bshard = batch_shardings(cfg, mesh, bspec)
+        step = make_prefill_step(cfg)
+        return step, (pspec, bspec), (pshard, bshard)
+    # decode
+    seq_sharded = shape.name == "long_500k" and cfg.family in ("hybrid",)
+    cspec = specs.cache_spec(cfg, shape)
+    cshard = cache_shardings(cfg, mesh, cspec, seq_sharded=seq_sharded)
+    tspec = specs.decode_tokens_spec(shape)
+    tshard = batch_shardings(cfg, mesh, {"t": tspec})["t"]
+    step = make_serve_step(cfg, mesh=mesh, seq_sharded=seq_sharded)
+    return step, (pspec, tspec, cspec), (pshard, tshard, cshard)

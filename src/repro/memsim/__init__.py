@@ -1,0 +1,43 @@
+"""Trace-driven memory-hierarchy simulator (JAX ``lax.scan`` inner loops).
+
+Methodology (two-pass functional simulation, DESIGN.md §2.1):
+
+  pass L1      : full access stream -> L1 hit mask (prefetchers never fill
+                 L1, so this pass is shared by baseline and every prefetcher)
+  pass L2-base : L1-miss substream  -> baseline L2 miss stream (recording
+                 ground truth + coverage denominator)
+  pass L2-pf   : merged demand + prefetch stream with per-line pf bits and
+                 fill-time tracking -> useful/late/evicted-early counts
+  pass LLC     : L2-miss substream  -> off-chip (DRAM) access counts
+
+Timing is a calibrated miss-penalty IPC model with measured MLP overlap
+(:mod:`repro.memsim.timing`), reproducing the paper's *relative* speedups.
+"""
+from repro.memsim.config import CacheLevelConfig, HierarchyConfig, PAPER, SCALED
+from repro.memsim.scan_cache import cache_pass, classify_prefetch_events
+from repro.memsim.hierarchy import (
+    DemandProfile,
+    PrefetchOutcome,
+    simulate_demand,
+    simulate_with_prefetch,
+)
+from repro.memsim.timing import TimingModel, estimate_cycles
+from repro.memsim.metrics import PrefetchMetrics, evaluate, geomean
+
+__all__ = [
+    "CacheLevelConfig",
+    "HierarchyConfig",
+    "PAPER",
+    "SCALED",
+    "cache_pass",
+    "classify_prefetch_events",
+    "DemandProfile",
+    "PrefetchOutcome",
+    "simulate_demand",
+    "simulate_with_prefetch",
+    "TimingModel",
+    "estimate_cycles",
+    "PrefetchMetrics",
+    "evaluate",
+    "geomean",
+]

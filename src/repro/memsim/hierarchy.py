@@ -1,0 +1,243 @@
+"""Hierarchy orchestration: shared demand profile + per-prefetcher runs.
+
+Logical time convention: every event carries a position on the *full* access
+trace; merged demand/prefetch ordering doubles positions so a prefetch
+triggered by access ``p`` lands at ``2p+1`` — after its trigger, before the
+next demand access at ``2(p+1)``.
+
+All per-event output arrays are kept so metrics can be evaluated over a
+position window (``eval_from_pos``): the paper evaluates BFS/BellmanFord on
+the *second* (post-graph-change) run only, with caches warm from run 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.memsim.config import HierarchyConfig
+from repro.memsim.scan_cache import cache_pass, classify_prefetch_events
+
+
+@dataclasses.dataclass
+class DemandProfile:
+    """Baseline (no-prefetch) simulation of one full trace."""
+
+    blocks: np.ndarray  # full trace line ids
+    iter_id: np.ndarray  # full trace iteration (epoch) ids
+    l1_hit: np.ndarray  # (N,) bool
+    # L1-miss substream (these are the L2 accesses):
+    l2_pos: np.ndarray  # positions into the full trace
+    l2_blocks: np.ndarray
+    l2_iter: np.ndarray
+    l2_hit: np.ndarray  # baseline L2 hit mask over substream
+    llc_hit: np.ndarray  # baseline LLC hit mask over the L2-miss substream
+    cfg: HierarchyConfig
+
+    @property
+    def num_accesses(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def l2_miss_pos(self) -> np.ndarray:
+        return self.l2_pos[~self.l2_hit]
+
+    @property
+    def l2_miss_blocks(self) -> np.ndarray:
+        return self.l2_blocks[~self.l2_hit]
+
+    @property
+    def l2_miss_iter(self) -> np.ndarray:
+        return self.l2_iter[~self.l2_hit]
+
+    def baseline_counts(self, from_pos: int = 0) -> dict:
+        # l2_pos / l2_miss_pos are sorted, so window counts are searchsorteds.
+        i_l2 = int(np.searchsorted(self.l2_pos, from_pos))
+        mp = self.l2_miss_pos
+        i_llc = int(np.searchsorted(mp, from_pos))
+        dram = int((~self.llc_hit[i_llc:]).sum())
+        return dict(
+            accesses=self.num_accesses - from_pos,
+            l1_miss=len(self.l2_pos) - i_l2,
+            l2_miss=int((~self.l2_hit[i_l2:]).sum()),
+            llc_miss=dram,
+            dram=dram,
+        )
+
+
+def simulate_demand(
+    blocks: np.ndarray, iter_id: np.ndarray, cfg: HierarchyConfig
+) -> DemandProfile:
+    l1_hit = cache_pass(blocks, cfg.l1.sets, cfg.l1.ways)
+    l2_pos = np.flatnonzero(~l1_hit).astype(np.int64)
+    l2_blocks = blocks[l2_pos]
+    l2_iter = iter_id[l2_pos]
+    l2_hit = cache_pass(l2_blocks, cfg.l2.sets, cfg.l2.ways)
+    llc_in = l2_blocks[~l2_hit]
+    llc_hit = cache_pass(llc_in, cfg.llc.sets, cfg.llc.ways)
+    return DemandProfile(
+        blocks=blocks,
+        iter_id=iter_id,
+        l1_hit=l1_hit,
+        l2_pos=l2_pos,
+        l2_blocks=l2_blocks,
+        l2_iter=l2_iter,
+        l2_hit=l2_hit,
+        llc_hit=llc_hit,
+        cfg=cfg,
+    )
+
+
+@dataclasses.dataclass
+class PrefetchOutcome:
+    """Per-prefetcher simulation result over one trace (per-event arrays)."""
+
+    pf_pos: np.ndarray  # issue positions (full-trace units)
+    pf_issuer: np.ndarray  # (n_pf,) int8 issuer id (composite prefetching)
+    pf_redundant: np.ndarray  # (n_pf,) bool: block already resident
+    pf_no_future: np.ndarray  # (n_pf,) bool: never demanded after issue
+    pf_llc_in_dram: np.ndarray  # over pf L2-misses: went to DRAM
+    pf_llc_in_pos: np.ndarray  # their positions
+    demand_l2_hit: np.ndarray  # (n_demand,) with prefetcher
+    demand_useful: np.ndarray  # (n_demand,) demand hit on pf line
+    demand_late: np.ndarray  # (n_demand,) useful but still in flight
+    demand_fill_issuer: np.ndarray  # (n_demand,) issuer of the useful fill, -1
+    demand_llc_hit: np.ndarray  # over demand L2 misses (with prefetcher)
+    evicted_early_total: int
+    pf_early: np.ndarray  # (n_pf,) prefetch fill evicted before reuse
+    metadata_bytes: int = 0
+
+    @property
+    def issued(self) -> int:
+        return len(self.pf_pos)
+
+
+def simulate_with_prefetch(
+    profile: DemandProfile,
+    pf_blocks: np.ndarray,
+    pf_pos: np.ndarray,
+    pf_issuer: np.ndarray | None = None,
+    metadata_bytes: int = 0,
+) -> PrefetchOutcome:
+    """Re-simulate L2+LLC with a (possibly multi-issuer) prefetch stream."""
+    cfg = profile.cfg
+    nd = len(profile.l2_blocks)
+    npf = len(pf_blocks)
+    if npf == 0:
+        return PrefetchOutcome(
+            pf_pos=np.zeros(0, dtype=np.int64),
+            pf_issuer=np.zeros(0, dtype=np.int8),
+            pf_redundant=np.zeros(0, dtype=bool),
+            pf_no_future=np.zeros(0, dtype=bool),
+            pf_llc_in_dram=np.zeros(0, dtype=bool),
+            pf_llc_in_pos=np.zeros(0, dtype=np.int64),
+            demand_l2_hit=profile.l2_hit.copy(),
+            demand_useful=np.zeros(nd, dtype=bool),
+            demand_late=np.zeros(nd, dtype=bool),
+            demand_fill_issuer=np.full(nd, -1, dtype=np.int8),
+            demand_llc_hit=profile.llc_hit.copy(),
+            evicted_early_total=0,
+            pf_early=np.zeros(0, dtype=bool),
+            metadata_bytes=metadata_bytes,
+        )
+
+    pf_blocks = np.asarray(pf_blocks, dtype=np.int64)
+    pf_pos = np.asarray(pf_pos, dtype=np.int64)
+    if pf_issuer is None:
+        pf_issuer = np.zeros(npf, dtype=np.int8)
+    pf_issuer = np.asarray(pf_issuer, dtype=np.int8)
+    if npf > 1 and np.any(pf_pos[1:] < pf_pos[:-1]):
+        o = np.argsort(pf_pos, kind="stable")
+        pf_pos, pf_blocks, pf_issuer = pf_pos[o], pf_blocks[o], pf_issuer[o]
+
+    # Merge demand (at 2p) and prefetch (at 2p+1) events. Both substreams are
+    # position-sorted, so the merge is a single searchsorted instead of a
+    # full argsort of the concatenation.
+    total = nd + npf
+    pf_slots = np.searchsorted(2 * profile.l2_pos, 2 * pf_pos + 1) + np.arange(npf)
+    demand_slots = np.ones(total, dtype=bool)
+    demand_slots[pf_slots] = False
+    demand_slots = np.flatnonzero(demand_slots)
+    mpos_s = np.empty(total, dtype=np.int64)
+    mblocks_s = np.empty(total, dtype=np.int64)
+    m_is_pf_s = np.zeros(total, dtype=bool)
+    mpos_s[demand_slots] = 2 * profile.l2_pos
+    mpos_s[pf_slots] = 2 * pf_pos + 1
+    mblocks_s[demand_slots] = profile.l2_blocks
+    mblocks_s[pf_slots] = pf_blocks
+    m_is_pf_s[pf_slots] = True
+
+    m_issuer = np.full(total, -1, dtype=np.int8)
+    m_issuer[pf_slots] = pf_issuer
+
+    hit = cache_pass(mblocks_s, cfg.l2.sets, cfg.l2.ways)
+    useful, late, redundant, early, fill_origin = classify_prefetch_events(
+        mblocks_s, m_is_pf_s, mpos_s, hit, 2 * cfg.pf_fill_window
+    )
+
+    # LLC sees every L2 miss (demand or prefetch) in order.
+    llc_sel = ~hit
+    llc_hit = cache_pass(mblocks_s[llc_sel], cfg.llc.sets, cfg.llc.ways)
+    llc_is_pf = m_is_pf_s[llc_sel]
+    llc_pos = mpos_s[llc_sel] // 2
+
+    # Unmerge.
+    demand_l2_hit = hit[demand_slots]
+    demand_useful = useful[demand_slots]
+    demand_late = late[demand_slots]
+    pf_redundant = redundant[pf_slots]
+    pf_early = early[pf_slots]
+    d_fill = fill_origin[demand_slots]
+    demand_fill_issuer = np.where(
+        d_fill >= 0, m_issuer[np.maximum(d_fill, 0)], -1
+    ).astype(np.int8)
+
+    # Demand LLC hits over demand L2 misses, in demand order: the demand
+    # events within the LLC stream appear in merged order == pos order,
+    # which equals demand-substream order (stable sort on pos).
+    demand_llc_hit = llc_hit[~llc_is_pf]
+
+    pf_no_future = _no_future_demand(
+        pf_blocks, pf_pos, profile.l2_miss_blocks, profile.l2_miss_pos
+    )
+
+    return PrefetchOutcome(
+        pf_pos=pf_pos,
+        pf_issuer=pf_issuer,
+        pf_redundant=pf_redundant,
+        pf_no_future=pf_no_future,
+        pf_llc_in_dram=(~llc_hit)[llc_is_pf],
+        pf_llc_in_pos=llc_pos[llc_is_pf],
+        demand_l2_hit=demand_l2_hit,
+        demand_useful=demand_useful,
+        demand_late=demand_late,
+        demand_fill_issuer=demand_fill_issuer,
+        demand_llc_hit=demand_llc_hit,
+        evicted_early_total=int(early.sum()),
+        pf_early=pf_early,
+        metadata_bytes=metadata_bytes,
+    )
+
+
+def _no_future_demand(
+    pf_blocks: np.ndarray,
+    pf_pos: np.ndarray,
+    demand_blocks: np.ndarray,
+    demand_pos: np.ndarray,
+) -> np.ndarray:
+    """Per-prefetch flag: block never appears in future baseline L2 misses."""
+    if len(pf_blocks) == 0:
+        return np.zeros(0, dtype=bool)
+    if len(demand_blocks) == 0:
+        return np.ones(len(pf_blocks), dtype=bool)
+    dkey_sort = (demand_blocks.astype(np.int64) << np.int64(31)) | demand_pos
+    order = np.argsort(dkey_sort)
+    db = demand_blocks[order]
+    dp = demand_pos[order]
+    BIG = np.int64(1) << 40
+    dkey = db.astype(np.int64) * BIG + dp
+    pkey = pf_blocks.astype(np.int64) * BIG + pf_pos
+    idx = np.searchsorted(dkey, pkey, side="right")
+    safe = np.minimum(idx, len(db) - 1)
+    has_future = (idx < len(dkey)) & (db[safe] == pf_blocks)
+    return ~has_future

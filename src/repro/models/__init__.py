@@ -1,0 +1,26 @@
+"""Model zoo: composable JAX definitions for the 10 assigned architectures."""
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    padded_vocab,
+)
+from repro.models.sharding import (
+    batch_shardings,
+    cache_shardings,
+    params_shardings,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "padded_vocab",
+    "batch_shardings",
+    "cache_shardings",
+    "params_shardings",
+]

@@ -1,0 +1,206 @@
+"""Attention: blocked (flash-style) training/prefill path, decode paths.
+
+The training/prefill path is a ``lax.scan`` over KV blocks with an online
+softmax — memory stays O(S * block) instead of O(S^2), which is what makes
+the 32k-prefill cells compile with sane ``memory_analysis()``. The Pallas
+TPU kernel (:mod:`repro.kernels.flash_attn`) implements the same tiling for
+the MXU; this module is the jnp fallback and the kernel's oracle.
+
+Decode paths: batched single-token attention against a KV cache, plus a
+sequence-sharded variant (``shard_map`` + partial-softmax psum combine) for
+long_500k where batch(=1) cannot cover the data axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, KV*groups, hd) for GQA."""
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd)).reshape(
+        b, s, kv * groups, hd
+    )
+
+
+def blocked_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KV, hd)
+    v: jnp.ndarray,  # (B, Skv, KV, hd)
+    causal: bool = True,
+    sliding_window: int = 0,
+    q_offset: int = 0,
+    block_size: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanned over KV blocks."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    groups = h // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = hd**-0.5
+    qf = (q * scale).astype(jnp.float32)
+
+    nblocks = -(-skv // block_size)
+    pad = nblocks * block_size - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblocks, block_size, h, hd)
+    vb = v.reshape(b, nblocks, block_size, h, hd)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, blk_idx = inp
+        k_pos = blk_idx * block_size + jnp.arange(block_size)
+        s = jnp.einsum(
+            "bqhd,bkhd->bhqk", qf, kblk.astype(jnp.float32)
+        )  # (B,H,Sq,blk)
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else jnp.ones(
+            (sq, block_size), bool
+        )
+        if sliding_window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - sliding_window)
+        mask = mask & (k_pos < skv)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, acc0),
+        (
+            jnp.moveaxis(kb, 1, 0),
+            jnp.moveaxis(vb, 1, 0),
+            jnp.arange(nblocks),
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, hd)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S, KV, hd)
+    v_cache: jnp.ndarray,  # (B, S, KV, hd)
+    cache_len: jnp.ndarray,  # (B,) valid lengths
+    sliding_window: int = 0,
+) -> jnp.ndarray:
+    """Single-token attention against a (batch-sharded) KV cache."""
+    b, s, kv, hd = k_cache.shape
+    h = q.shape[2]
+    groups = h // kv
+    scale = hd**-0.5
+    qf = (q[:, 0] * scale).astype(jnp.float32).reshape(b, kv, groups, hd)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32)
+    )  # (B,KV,G,S)
+    pos = jnp.arange(s)
+    mask = pos[None, :] < cache_len[:, None]  # (B,S)
+    if sliding_window:
+        mask = mask & (pos[None, :] >= cache_len[:, None] - sliding_window)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def decode_attention_seqsharded(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    mesh,
+    seq_axis: str = "data",
+    k_new: Optional[jnp.ndarray] = None,  # (B, 1, KV, hd) token to insert
+    v_new: Optional[jnp.ndarray] = None,
+):
+    """long_500k decode: the KV cache's sequence dim is sharded over
+    ``seq_axis``; each shard computes a partial softmax and the results are
+    combined exactly via (max, sum) psum reductions of the log-sum-exp.
+
+    The new token's KV insert happens INSIDE the shard_map (only the owner
+    shard writes) — perf iteration 4: a scatter into a seq-sharded cache
+    outside the shard region forced XLA into "involuntary full
+    rematerialization" (gather + re-shard of the whole 500k cache per step).
+
+    Returns (out, k_cache, v_cache).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    b, s, kvh, hd = k_cache.shape
+    h = q.shape[2]
+    groups = h // kvh
+    scale = hd**-0.5
+    axis_size = mesh.shape[seq_axis]
+    shard_len = s // axis_size
+    insert = k_new is not None
+    if not insert:
+        k_new = jnp.zeros((b, 1, kvh, hd), k_cache.dtype)
+        v_new = jnp.zeros((b, 1, kvh, hd), v_cache.dtype)
+
+    def local(q_, k_, v_, cl_, kn_, vn_):
+        idx = jax.lax.axis_index(seq_axis)
+        if insert:
+            # owner-shard write of the new token at global position cl_
+            local_pos = cl_ - idx * shard_len  # (B,)
+            owner = (local_pos >= 0) & (local_pos < shard_len)
+            safe = jnp.clip(local_pos, 0, shard_len - 1)
+            bidx = jnp.arange(b)
+            k_upd = k_.at[bidx, safe].set(
+                jnp.where(owner[:, None, None], kn_[:, 0], k_[bidx, safe])
+            )
+            v_upd = v_.at[bidx, safe].set(
+                jnp.where(owner[:, None, None], vn_[:, 0], v_[bidx, safe])
+            )
+            k_, v_ = k_upd, v_upd
+            cl_ = cl_ + 1
+        qf = (q_[:, 0] * scale).astype(jnp.float32).reshape(b, kvh, groups, hd)
+        scores = jnp.einsum("bkgd,bskd->bkgs", qf, k_.astype(jnp.float32))
+        pos = idx * shard_len + jnp.arange(shard_len)
+        mask = pos[None, :] < cl_[:, None]
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        m_loc = scores.max(axis=-1)
+        m_glob = jax.lax.pmax(m_loc, seq_axis)
+        p = jnp.exp(scores - m_glob[..., None])
+        l_loc = p.sum(axis=-1)
+        l_glob = jax.lax.psum(l_loc, seq_axis)
+        o_loc = jnp.einsum("bkgs,bskd->bkgd", p, v_.astype(jnp.float32))
+        o_glob = jax.lax.psum(o_loc, seq_axis)
+        out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+        return out.reshape(b, 1, h, hd).astype(q.dtype), k_, v_
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(),  # q replicated across the seq axis
+            P(None, seq_axis, None, None),
+            P(None, seq_axis, None, None),
+            P(),
+            P(),
+            P(),
+        ),
+        out_specs=(P(), P(None, seq_axis, None, None), P(None, seq_axis, None, None)),
+        check_rep=False,
+    )(q, k_cache, v_cache, cache_len, k_new, v_new)

@@ -1,0 +1,80 @@
+"""Core NN layers: RMSNorm, RoPE / M-RoPE, SwiGLU, initializers.
+
+Pure-function JAX (no framework deps); parameters are plain pytrees.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def rope(
+    x: jnp.ndarray,  # (..., S, H, hd)
+    positions: jnp.ndarray,  # (..., S)
+    theta: float = 1e4,
+) -> jnp.ndarray:
+    """Standard rotary embedding (half-split convention)."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(
+    x: jnp.ndarray,  # (..., S, H, hd)
+    positions3: jnp.ndarray,  # (..., 3, S): t/h/w position ids
+    sections: Tuple[int, int, int],
+    theta: float = 1e6,
+) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): rotary half-dims are split into t/h/w
+    sections, each rotated by its own position stream."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = _rope_freqs(hd, theta)  # (half,)
+    # Select which position stream drives each frequency slot.
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )  # (half,)
+    # positions3: (..., 3, S) -> (..., S, half)
+    pos = jnp.take_along_axis(
+        jnp.moveaxis(positions3, -2, -1),  # (..., S, 3)
+        jnp.broadcast_to(sec_id, positions3.shape[:-2] + (positions3.shape[-1], half)),
+        axis=-1,
+    )
+    ang = pos.astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down.astype(x.dtype))
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32) -> jnp.ndarray:
+    fan_in = shape[in_axis]
+    std = (1.0 / fan_in) ** 0.5
+    return (jax.random.normal(key, shape) * std).astype(dtype)

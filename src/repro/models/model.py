@@ -1,0 +1,713 @@
+"""Model zoo assembly: init / train-forward / prefill / decode for all six
+families (dense, moe, ssm, hybrid, encdec, vlm).
+
+Design choices that matter at scale:
+  - scan-over-layers with stacked params: HLO size and compile time are
+    O(1) in depth (llama3-405b's 126 layers compile as one scanned layer);
+  - blocked attention everywhere (memory O(S*block));
+  - remat policy per config (dots_saveable default for train);
+  - KV caches are functional (donated by the launcher's serve loop);
+  - vocab padded to a multiple of 128 so the model axis always divides it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    blocked_attention,
+    decode_attention,
+    decode_attention_seqsharded,
+)
+from repro.models.layers import dense_init, mrope, rms_norm, rope, swiglu
+from repro.models.sharding import shard_hint
+from repro.models.moe import MoEParams, moe_ffn
+from repro.models.ssm import SSMParams, ssm_block, ssm_decode_step
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // 128) * 128
+
+
+def layer_scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan over stacked layers, or an unrolled Python loop when
+    ``cfg.scan_layers`` is False (the layer-probe path: XLA cost_analysis
+    does not descend into while bodies, so probes must lower inline)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    length = len(jax.tree.leaves(xs)[0])
+    outs = []
+    for i in range(length):
+        carry, out = body(carry, jax.tree.map(lambda a: a[i], xs))
+        outs.append(out)
+    if outs and outs[0] is not None:
+        stacked = jax.tree.map(lambda *ys: jnp.stack(ys), *outs)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+
+def _attn_params(key, cfg: ModelConfig, layers: Optional[int], dtype):
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    pre = (layers,) if layers else ()
+    ks = jax.random.split(key, 6)
+
+    def init(k, shape, in_axis):
+        if layers:
+            return dense_init(k, (layers,) + shape, in_axis=in_axis + 1, dtype=dtype)
+        return dense_init(k, shape, in_axis=in_axis, dtype=dtype)
+
+    p = {
+        "wq": init(ks[0], (d, cfg.num_heads * hd), 0),
+        "wk": init(ks[1], (d, cfg.num_kv_heads * hd), 0),
+        "wv": init(ks[2], (d, cfg.num_kv_heads * hd), 0),
+        "wo": init(ks[3], (cfg.num_heads * hd, d), 0),
+    }
+    if cfg.qk_norm:
+        p["qn"] = jnp.ones(pre + (hd,), dtype)
+        p["kn"] = jnp.ones(pre + (hd,), dtype)
+    return p
+
+
+def _mlp_params(key, cfg: ModelConfig, layers: Optional[int], dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+
+    def init(k, shape, in_axis):
+        if layers:
+            return dense_init(k, (layers,) + shape, in_axis=in_axis + 1, dtype=dtype)
+        return dense_init(k, shape, in_axis=in_axis, dtype=dtype)
+
+    return {
+        "wg": init(ks[0], (d, f), 0),
+        "wu": init(ks[1], (d, f), 0),
+        "wd": init(ks[2], (f, d), 0),
+    }
+
+
+def _moe_params(key, cfg: ModelConfig, layers: int, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (layers, d, e), in_axis=1, dtype=dtype),
+        "wg": dense_init(ks[1], (layers, e, d, f), in_axis=2, dtype=dtype),
+        "wu": dense_init(ks[2], (layers, e, d, f), in_axis=2, dtype=dtype),
+        "wd": dense_init(ks[3], (layers, e, f, d), in_axis=2, dtype=dtype),
+    }
+
+
+def _ssm_params(key, cfg: ModelConfig, layers: int, dtype):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    h = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    kdim = 2 * d_inner + 2 * n + h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (layers, d, kdim), in_axis=1, dtype=dtype),
+        "a_log": jnp.zeros((layers, h), dtype) + jnp.log(jnp.float32(1.0)).astype(dtype),
+        "d_skip": jnp.ones((layers, h), dtype),
+        "dt_bias": jnp.zeros((layers, h), dtype),
+        "norm": jnp.ones((layers, d_inner), dtype),
+        "w_out": dense_init(ks[1], (layers, d_inner, d), in_axis=1, dtype=dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    vp = padded_vocab(cfg.vocab_size)
+    keys = jax.random.split(key, 12)
+    params: Dict[str, Any] = {
+        "embed": dense_init(keys[0], (vp, cfg.d_model), in_axis=1, dtype=dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[1], (vp, cfg.d_model), in_axis=1, dtype=dtype
+        )
+    L = cfg.num_layers
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = {
+            "ln1": jnp.ones((L, cfg.d_model), dtype),
+            "ln2": jnp.ones((L, cfg.d_model), dtype),
+            "attn": _attn_params(keys[2], cfg, L, dtype),
+            "mlp": _mlp_params(keys[3], cfg, L, dtype),
+        }
+    elif fam == "moe":
+        params["blocks"] = {
+            "ln1": jnp.ones((L, cfg.d_model), dtype),
+            "ln2": jnp.ones((L, cfg.d_model), dtype),
+            "attn": _attn_params(keys[2], cfg, L, dtype),
+            "moe": _moe_params(keys[3], cfg, L, dtype),
+        }
+    elif fam == "ssm":
+        params["blocks"] = {
+            "ln1": jnp.ones((L, cfg.d_model), dtype),
+            "ssm": _ssm_params(keys[2], cfg, L, dtype),
+        }
+    elif fam == "hybrid":
+        params["blocks"] = {
+            "ln1": jnp.ones((L, cfg.d_model), dtype),
+            "ssm": _ssm_params(keys[2], cfg, L, dtype),
+        }
+        params["shared_attn"] = {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": _attn_params(keys[4], cfg, None, dtype),
+            "mlp": _mlp_params(keys[5], cfg, None, dtype),
+        }
+    elif fam == "encdec":
+        Le = cfg.encoder_layers
+        params["encoder"] = {
+            "ln1": jnp.ones((Le, cfg.d_model), dtype),
+            "ln2": jnp.ones((Le, cfg.d_model), dtype),
+            "attn": _attn_params(keys[6], cfg, Le, dtype),
+            "mlp": _mlp_params(keys[7], cfg, Le, dtype),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        params["blocks"] = {
+            "ln1": jnp.ones((L, cfg.d_model), dtype),
+            "ln2": jnp.ones((L, cfg.d_model), dtype),
+            "ln3": jnp.ones((L, cfg.d_model), dtype),
+            "attn": _attn_params(keys[2], cfg, L, dtype),
+            "xattn": _attn_params(keys[8], cfg, L, dtype),
+            "mlp": _mlp_params(keys[3], cfg, L, dtype),
+        }
+    else:  # pragma: no cover
+        raise ValueError(fam)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+
+def _apply_rope(cfg: ModelConfig, q, k, positions, positions3=None):
+    if cfg.mrope and positions3 is not None:
+        q = mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _attention_block(
+    p, cfg: ModelConfig, x, positions, positions3=None, causal=True, kv_x=None
+):
+    """Full-sequence attention (train/prefill). kv_x != None => cross-attn."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"].astype(x.dtype)).reshape(
+        b, s, cfg.num_heads, hd
+    )
+    k = jnp.einsum("bsd,dk->bsk", src, p["wk"].astype(x.dtype)).reshape(
+        b, src.shape[1], cfg.num_kv_heads, hd
+    )
+    v = jnp.einsum("bsd,dk->bsk", src, p["wv"].astype(x.dtype)).reshape(
+        b, src.shape[1], cfg.num_kv_heads, hd
+    )
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"])
+        k = rms_norm(k, p["kn"])
+    if kv_x is None and cfg.rope_theta and cfg.family != "encdec":
+        q, k = _apply_rope(cfg, q, k, positions, positions3)
+    o = blocked_attention(
+        q, k, v, causal=causal, sliding_window=cfg.sliding_window
+    )
+    o = o.reshape(b, s, cfg.num_heads * hd)
+    return jnp.einsum("bsk,kd->bsd", o, p["wo"].astype(x.dtype)), (k, v)
+
+
+def _attention_decode(
+    p, cfg: ModelConfig, x, k_cache, v_cache, cache_len, mesh=None, seq_sharded=False
+):
+    """One-token attention against the cache; returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"].astype(x.dtype)).reshape(
+        b, 1, cfg.num_heads, hd
+    )
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"].astype(x.dtype)).reshape(
+        b, 1, cfg.num_kv_heads, hd
+    )
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"].astype(x.dtype)).reshape(
+        b, 1, cfg.num_kv_heads, hd
+    )
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"])
+        k = rms_norm(k, p["kn"])
+    if cfg.rope_theta and cfg.family != "encdec":
+        q, _ = _apply_rope(cfg, q, q, cache_len[:, None])
+        k, _ = _apply_rope(cfg, k, k, cache_len[:, None])
+    s_max = k_cache.shape[1]
+    if seq_sharded and mesh is not None:
+        # Insert happens inside the shard region (owner shard writes) —
+        # perf iteration 4, see decode_attention_seqsharded.
+        o, k_cache, v_cache = decode_attention_seqsharded(
+            q, k_cache, v_cache, cache_len, mesh, k_new=k, v_new=v
+        )
+    else:
+        # Functional cache insert at position cache_len (ring for SWA).
+        if cfg.sliding_window and cfg.sliding_window < s_max:
+            write_pos = cache_len % cfg.sliding_window
+        else:
+            write_pos = jnp.minimum(cache_len, s_max - 1)
+        bidx = jnp.arange(b)
+        k_cache = k_cache.at[bidx, write_pos].set(k[:, 0])
+        v_cache = v_cache.at[bidx, write_pos].set(v[:, 0])
+        eff_len = (
+            jnp.minimum(cache_len + 1, cfg.sliding_window)
+            if cfg.sliding_window and cfg.sliding_window < s_max
+            else cache_len + 1
+        )
+        o = decode_attention(
+            q, k_cache, v_cache, eff_len,
+            sliding_window=0,  # ring buffer already bounds the window
+        )
+    o = o.reshape(b, 1, cfg.num_heads * hd)
+    return (
+        jnp.einsum("bsk,kd->bsd", o, p["wo"].astype(x.dtype)),
+        k_cache,
+        v_cache,
+    )
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    tokens: Optional[jnp.ndarray],  # (B, S) or None when embeds given
+    *,
+    embeds: Optional[jnp.ndarray] = None,  # (B, S, D) stub frontends
+    positions3: Optional[jnp.ndarray] = None,  # (B, 3, S) M-RoPE
+    encoder_frames: Optional[jnp.ndarray] = None,  # (B, Se, D) audio stub
+    return_cache: bool = False,
+):
+    """Returns (logits, aux_loss, cache_or_None)."""
+    dt = cfg.activation_dtype
+    if embeds is not None:
+        x = embeds.astype(dt)
+    else:
+        x = params["embed"].astype(dt)[tokens]
+    x = shard_hint(x, "batch", None, None)
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encoder_forward(cfg, params["encoder"], encoder_frames)
+
+    blocks = params["blocks"]
+    caches = [] if return_cache else None
+
+    if cfg.family in ("dense", "vlm", "moe"):
+
+        def layer(x, lp):
+            x = shard_hint(x, "batch", None, None)
+            h = rms_norm(x, lp["ln1"])
+            attn_out, kv = _attention_block(
+                lp["attn"], cfg, h, positions, positions3
+            )
+            x = x + attn_out
+            h = rms_norm(x, lp["ln2"])
+            if cfg.family == "moe":
+                mp = MoEParams(
+                    lp["moe"]["router"], lp["moe"]["wg"], lp["moe"]["wu"], lp["moe"]["wd"]
+                )
+                y, aux, _ = moe_ffn(h.reshape(b * s, d), mp, cfg.moe_top_k)
+                y = y.reshape(b, s, d)
+            else:
+                y = swiglu(h, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+                aux = jnp.zeros((), jnp.float32)
+            return x + y, (aux, kv)
+
+        layer = _remat(layer, cfg)
+
+        def scan_body(carry, lp):
+            x, aux_acc = carry
+            x, (aux, kv) = layer(x, lp)
+            out = kv if return_cache else None
+            return (x, aux_acc + aux), out
+
+        (x, aux_total), kvs = layer_scan(cfg, scan_body, (x, aux_total), blocks)
+        if return_cache:
+            caches = kvs  # (k: (L,B,S,KV,hd), v: (L,B,S,KV,hd))
+
+    elif cfg.family == "ssm":
+
+        def layer(x, lp):
+            h = rms_norm(x, lp["ln1"])
+            sp = SSMParams(**{k: lp["ssm"][k] for k in SSMParams._fields})
+            y, state = ssm_block(sp, h, cfg)
+            return x + y, state
+
+        layer = _remat(layer, cfg)
+
+        def scan_body(x, lp):
+            x, state = layer(x, lp)
+            return x, state if return_cache else None
+
+        x, states = layer_scan(cfg, scan_body, x, blocks)
+        if return_cache:
+            caches = states
+
+    elif cfg.family == "hybrid":
+        x, aux_total, caches = _hybrid_forward(
+            cfg, params, x, positions, return_cache
+        )
+
+    elif cfg.family == "encdec":
+
+        def layer(x, lp):
+            h = rms_norm(x, lp["ln1"])
+            attn_out, kv = _attention_block(lp["attn"], cfg, h, positions)
+            x = x + attn_out
+            h = rms_norm(x, lp["ln3"])
+            xo, xkv = _attention_block(
+                lp["xattn"], cfg, h, positions, causal=False, kv_x=enc_out
+            )
+            x = x + xo
+            h = rms_norm(x, lp["ln2"])
+            y = swiglu(h, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+            return x + y, (kv, xkv)
+
+        layer = _remat(layer, cfg)
+
+        def scan_body(x, lp):
+            x, kvs = layer(x, lp)
+            return x, kvs if return_cache else None
+
+        x, kvs = layer_scan(cfg, scan_body, x, blocks)
+        if return_cache:
+            caches = kvs
+
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(dt))
+    logits = shard_hint(logits, "batch", None, "model")
+    return logits, aux_total, caches
+
+
+def _encoder_forward(cfg: ModelConfig, enc, frames):
+    dt = cfg.activation_dtype
+    x = frames.astype(dt)
+    b, s, d = x.shape
+    # sinusoidal positions (whisper-style)
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half) / max(half - 1, 1) * jnp.log(10000.0))
+    ang = jnp.arange(s)[:, None] * freqs[None, :]
+    pos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dt)
+    x = x + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def layer(x, lp):
+        h = rms_norm(x, lp["ln1"])
+        o, _ = _attention_block(lp["attn"], cfg, h, positions, causal=False)
+        x = x + o
+        h = rms_norm(x, lp["ln2"])
+        return x + swiglu(h, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"]), None
+
+    layer = _remat(layer, cfg)
+    stacked = {k: v for k, v in enc.items() if k != "final_norm"}
+    x, _ = layer_scan(cfg, lambda c, lp: layer(c, lp), x, stacked)
+    return rms_norm(x, enc["final_norm"])
+
+
+def _hybrid_forward(cfg, params, x, positions, return_cache):
+    """Zamba2: groups of ``hybrid_attn_every`` mamba layers + shared attn."""
+    b, s, d = x.shape
+    blocks = params["blocks"]
+    shared = params["shared_attn"]
+    every = cfg.hybrid_attn_every
+    L = cfg.num_layers
+    groups = L // every
+    rest = L - groups * every
+    aux = jnp.zeros((), jnp.float32)
+
+    def mamba_layer(x, lp):
+        h = rms_norm(x, lp["ln1"])
+        sp = SSMParams(**{k: lp["ssm"][k] for k in SSMParams._fields})
+        y, state = ssm_block(sp, h, cfg)
+        return x + y, state
+
+    mamba_layer = _remat(mamba_layer, cfg)
+
+    def shared_block(x):
+        h = rms_norm(x, shared["ln1"])
+        o, kv = _attention_block(shared["attn"], cfg, h, positions)
+        x = x + o
+        h = rms_norm(x, shared["ln2"])
+        y = swiglu(h, shared["mlp"]["wg"], shared["mlp"]["wu"], shared["mlp"]["wd"])
+        return x + y, kv
+
+    grouped = jax.tree.map(
+        lambda a: a[: groups * every].reshape((groups, every) + a.shape[1:]), blocks
+    )
+    tail = jax.tree.map(lambda a: a[groups * every :], blocks)
+
+    states_all = []
+    kv_all = []
+
+    def group_body(x, gp):
+        def inner(x, lp):
+            x, st = mamba_layer(x, lp)
+            return x, st
+
+        x, states = layer_scan(cfg, inner, x, gp)
+        x, kv = shared_block(x)
+        return x, (states, kv)
+
+    x, (g_states, g_kv) = layer_scan(cfg, group_body, x, grouped)
+    if rest:
+        x, t_states = layer_scan(cfg, lambda c, lp: mamba_layer(c, lp), x, tail)
+    else:
+        t_states = None
+    caches = (g_states, g_kv, t_states) if return_cache else None
+    return x, aux, caches
+
+
+# --------------------------------------------------------------------------
+# Loss / train step body
+# --------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux, _ = forward(
+        cfg,
+        params,
+        batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions3=batch.get("positions3"),
+        encoder_frames=batch.get("frames"),
+    )
+    labels = batch["labels"]
+    vp = logits.shape[-1]
+    # mask padded vocab
+    logits = logits.astype(jnp.float32)
+    if vp > cfg.vocab_size:
+        neg = jnp.full((vp - cfg.vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., cfg.vocab_size :].set(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - ll).mean()
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Decode (serve_step)
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Allocate the decode cache pytree for one model."""
+    dt = dtype or cfg.activation_dtype
+    hd = cfg.resolved_head_dim
+    L = cfg.num_layers
+    eff_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {
+            "k": jnp.zeros((L, batch, eff_len, cfg.num_kv_heads, hd), dt),
+            "v": jnp.zeros((L, batch, eff_len, cfg.num_kv_heads, hd), dt),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        h = d_inner // cfg.ssm_head_dim
+        return {
+            "state": jnp.zeros((L, batch, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        h = d_inner // cfg.ssm_head_dim
+        every = cfg.hybrid_attn_every
+        groups = cfg.num_layers // every
+        rest = cfg.num_layers - groups * every
+        cache = {
+            "g_state": jnp.zeros(
+                (groups, every, batch, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+            ),
+            "g_k": jnp.zeros((groups, batch, eff_len, cfg.num_kv_heads, hd), dt),
+            "g_v": jnp.zeros((groups, batch, eff_len, cfg.num_kv_heads, hd), dt),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+        if rest:
+            cache["t_state"] = jnp.zeros(
+                (rest, batch, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+            )
+        return cache
+    if cfg.family == "encdec":
+        return {
+            "k": jnp.zeros((L, batch, eff_len, cfg.num_kv_heads, hd), dt),
+            "v": jnp.zeros((L, batch, eff_len, cfg.num_kv_heads, hd), dt),
+            "xk": jnp.zeros((L, batch, eff_len, cfg.num_kv_heads, hd), dt),
+            "xv": jnp.zeros((L, batch, eff_len, cfg.num_kv_heads, hd), dt),
+            "xlen": jnp.zeros((batch,), jnp.int32),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    tokens: jnp.ndarray,  # (B, 1)
+    cache: Dict[str, jnp.ndarray],
+    mesh=None,
+    seq_sharded: bool = False,
+):
+    """serve_step: one new token against the cache. Returns (logits, cache)."""
+    dt = cfg.activation_dtype
+    x = params["embed"].astype(dt)[tokens]
+    b = x.shape[0]
+    blocks = params["blocks"]
+    cache_len = cache["len"]
+
+    if cfg.family in ("dense", "vlm", "moe"):
+
+        def body(x, xs):
+            lp, kc, vc = xs
+            h = rms_norm(x, lp["ln1"])
+            o, kc, vc = _attention_decode(
+                lp["attn"], cfg, h, kc, vc, cache_len, mesh, seq_sharded
+            )
+            x = x + o
+            h = rms_norm(x, lp["ln2"])
+            if cfg.family == "moe":
+                mp = MoEParams(
+                    lp["moe"]["router"], lp["moe"]["wg"], lp["moe"]["wu"], lp["moe"]["wd"]
+                )
+                y, _, _ = moe_ffn(h.reshape(b, -1), mp, cfg.moe_top_k)
+                y = y.reshape(b, 1, -1)
+            else:
+                y = swiglu(h, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+            return x + y, (kc, vc)
+
+        x, (new_k, new_v) = layer_scan(cfg, body, x, (blocks, cache["k"], cache["v"]))
+        cache = dict(cache, k=new_k, v=new_v, len=cache_len + 1)
+
+    elif cfg.family == "ssm":
+
+        def body(x, xs):
+            lp, st = xs
+            h = rms_norm(x, lp["ln1"])
+            sp = SSMParams(**{k: lp["ssm"][k] for k in SSMParams._fields})
+            y, st = ssm_decode_step(sp, h, st, cfg)
+            return x + y, st
+
+        x, new_state = layer_scan(cfg, body, x, (blocks, cache["state"]))
+        cache = dict(cache, state=new_state, len=cache_len + 1)
+
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_decode(cfg, params, x, cache, mesh, seq_sharded)
+
+    elif cfg.family == "encdec":
+
+        def body(x, xs):
+            lp, kc, vc, xk, xv = xs
+            h = rms_norm(x, lp["ln1"])
+            o, kc, vc = _attention_decode(lp["attn"], cfg, h, kc, vc, cache_len)
+            x = x + o
+            h = rms_norm(x, lp["ln3"])
+            xo = _cross_decode(lp["xattn"], cfg, h, xk, xv, cache["xlen"])
+            x = x + xo
+            h = rms_norm(x, lp["ln2"])
+            y = swiglu(h, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+            return x + y, (kc, vc)
+
+        x, (new_k, new_v) = layer_scan(
+            cfg, body, x, (blocks, cache["k"], cache["v"], cache["xk"], cache["xv"])
+        )
+        cache = dict(cache, k=new_k, v=new_v, len=cache_len + 1)
+
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(dt))
+    logits = shard_hint(logits, "batch", None, "model")
+    return logits, cache
+
+
+def _cross_decode(p, cfg, x, xk, xv, xlen):
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"].astype(x.dtype)).reshape(
+        b, 1, cfg.num_heads, hd
+    )
+    o = decode_attention(q, xk, xv, xlen)
+    o = o.reshape(b, 1, cfg.num_heads * hd)
+    return jnp.einsum("bsk,kd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def _hybrid_decode(cfg, params, x, cache, mesh, seq_sharded):
+    blocks = params["blocks"]
+    shared = params["shared_attn"]
+    every = cfg.hybrid_attn_every
+    groups = cfg.num_layers // every
+    rest = cfg.num_layers - groups * every
+    cache_len = cache["len"]
+    b = x.shape[0]
+
+    grouped = jax.tree.map(
+        lambda a: a[: groups * every].reshape((groups, every) + a.shape[1:]), blocks
+    )
+    tail = jax.tree.map(lambda a: a[groups * every :], blocks)
+
+    def mamba_step(x, xs):
+        lp, st = xs
+        h = rms_norm(x, lp["ln1"])
+        sp = SSMParams(**{k: lp["ssm"][k] for k in SSMParams._fields})
+        y, st = ssm_decode_step(sp, h, st, cfg)
+        return x + y, st
+
+    def group_body(x, xs):
+        gp, g_st, kc, vc = xs
+        x, new_st = layer_scan(cfg, mamba_step, x, (gp, g_st))
+        h = rms_norm(x, shared["ln1"])
+        o, kc, vc = _attention_decode(
+            shared["attn"], cfg, h, kc, vc, cache_len, mesh, seq_sharded
+        )
+        x = x + o
+        h = rms_norm(x, shared["ln2"])
+        y = swiglu(h, shared["mlp"]["wg"], shared["mlp"]["wu"], shared["mlp"]["wd"])
+        return x + y, (new_st, kc, vc)
+
+    x, (new_gstate, new_gk, new_gv) = layer_scan(
+        cfg, group_body, x, (grouped, cache["g_state"], cache["g_k"], cache["g_v"])
+    )
+    cache = dict(cache, g_state=new_gstate, g_k=new_gk, g_v=new_gv)
+    if rest:
+        x, new_t = layer_scan(cfg, mamba_step, x, (tail, cache["t_state"]))
+        cache["t_state"] = new_t
+    cache["len"] = cache_len + 1
+    return x, cache

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch, EP+TP.
+
+Dispatch is the production gather/scatter form (sort-by-expert, capacity
+drop), not the masked-dense form — compiled FLOPs stay proportional to
+*active* parameters, which is what the roofline's MODEL_FLOPS/HLO_FLOPs
+ratio checks. Under pjit the scatter/gather over the expert axis lowers to
+the EP all-to-all pattern.
+
+``use_recorded_dispatch`` is the AMC-technique integration (DESIGN.md
+§2.2): routing decisions for step k are *recorded* and replayed as the
+dispatch plan for step k+1 (roles swap每 step, like AMC's metadata spaces).
+Inter-step routing stability plays the role of the paper's inter-iteration
+frontier stability: the replayed plan lets the gather pipeline start before
+the router's logits are even computed, removing the router->dispatch
+serialization — the analogue of prefetching the miss stream at the frontier
+trigger. Tokens whose replayed assignment is stale are caught by the exact
+router output and corrected through the combine weights (stale rows get
+zero weight), preserving exactness.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray  # (D, E)
+    w_gate: jnp.ndarray  # (E, D, F)
+    w_up: jnp.ndarray  # (E, D, F)
+    w_down: jnp.ndarray  # (E, F, D)
+
+
+def route_topk(
+    x: jnp.ndarray, router: jnp.ndarray, top_k: int
+) -> tuple:
+    """Returns (expert_idx (N,k), weights (N,k), aux_loss)."""
+    logits = jnp.einsum("nd,de->ne", x.astype(jnp.float32), router.astype(jnp.float32))
+    weights, idx = jax.lax.top_k(logits, top_k)
+    weights = jax.nn.softmax(weights, axis=-1)
+    # Load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    e = router.shape[1]
+    density = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    p_mean = probs.mean(axis=0)
+    aux = e * jnp.sum(density * p_mean)
+    return idx, weights.astype(x.dtype), aux
+
+
+def _dispatch_plan(expert_idx: jnp.ndarray, num_experts: int, capacity: int):
+    """Sort token-slots by expert; assign within-expert ranks; drop overflow.
+
+    Returns (slot_expert, slot_rank, keep) over the flattened (N*k,) slots.
+    """
+    nk = expert_idx.size
+    flat_e = expert_idx.reshape(-1)
+    order = jnp.argsort(flat_e)  # stable
+    sorted_e = flat_e[order]
+    ones = jnp.ones_like(sorted_e)
+    # rank within expert = position - first position of that expert
+    seg_start = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), (sorted_e[1:] != sorted_e[:-1]).astype(jnp.int32)]
+    )
+    # index of segment start via cummax of (i where start else 0)
+    idxs = jnp.arange(nk)
+    start_idx = jax.lax.cummax(jnp.where(seg_start.astype(bool) | (idxs == 0), idxs, 0))
+    rank_sorted = idxs - start_idx
+    rank = jnp.zeros(nk, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < capacity
+    return flat_e, rank, keep
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # (N, D) flattened tokens
+    p: MoEParams,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    recorded_plan: Optional[tuple] = None,
+) -> tuple:
+    """Returns (y (N, D), aux_loss, plan) — ``plan`` can be replayed as
+    ``recorded_plan`` next step (AMC recorded-dispatch)."""
+    n, d = x.shape
+    e = p.router.shape[1]
+    f = p.w_gate.shape[2]
+    capacity = max(int(capacity_factor * n * top_k / e), 1)
+
+    expert_idx, weights, aux = route_topk(x, p.router, top_k)
+
+    if recorded_plan is not None:
+        # AMC-style replay: dispatch along last step's plan; stale slots are
+        # zero-weighted by the *current* router output below.
+        flat_e, rank, keep = recorded_plan
+    else:
+        flat_e, rank, keep = _dispatch_plan(expert_idx, e, capacity)
+    plan = (flat_e, rank, keep)
+
+    token_of_slot = jnp.repeat(jnp.arange(n), top_k)
+    # Correctness guard for replayed plans: weight slots by the current
+    # router only where the replayed expert matches the current assignment.
+    cur_e = expert_idx.reshape(-1)
+    w_slot = jnp.where(flat_e == cur_e, weights.reshape(-1), 0.0)
+    w_slot = jnp.where(keep, w_slot, 0.0)
+
+    # Perf iteration 5 (EXPERIMENTS §5): without capacity-dim sharding the
+    # dispatch scatter replicates the (E, C, D) tensor on every device and
+    # the compiler reduces it with full-tensor all-reduces (~1.2e11 B/layer
+    # on mixtral train). Sharding C over the batch axes makes the scatter
+    # lower to the intended EP-style all-to-all (token-embedding payload).
+    # Gated on token volume: for decode-sized batches the capacity dim is
+    # tiny and the forced reshard is pure overhead (measured 100x+
+    # regression on the MoE decode cells — §5.4 note).
+    from repro.models.sharding import shard_hint
+
+    big = n >= 16384
+    hint = shard_hint if big else (lambda t, *a: t)
+
+    dispatch = jnp.zeros((e, capacity, d), x.dtype)
+    safe_rank = jnp.where(keep, rank, capacity - 1)
+    dispatch = dispatch.at[flat_e, safe_rank].add(
+        jnp.where(keep[:, None], x[token_of_slot], 0)
+    )
+    dispatch = hint(dispatch, None, "batch", None)
+    g = jnp.einsum("ecd,edf->ecf", dispatch, p.w_gate.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", dispatch, p.w_up.astype(x.dtype))
+    h = hint(jax.nn.silu(g) * u, None, "batch", "model")
+    y_exp = jnp.einsum("ecf,efd->ecd", h, p.w_down.astype(x.dtype))
+    y_exp = hint(y_exp, None, "batch", None)
+
+    y_slot = y_exp[flat_e, safe_rank] * w_slot[:, None].astype(x.dtype)
+    y = jnp.zeros((n, d), x.dtype).at[token_of_slot].add(y_slot)
+    y = hint(y, "batch", None)
+    return y, aux, plan

@@ -1,0 +1,209 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production mesh.
+
+Mesh axes: ("pod", "data", "model") multi-pod / ("data", "model") single-pod.
+  - batch        -> ("pod", "data") (pure DP across pods: only the gradient
+                    all-reduce crosses the slow inter-pod links)
+  - vocab, d_ff, attention heads, experts' f dim -> "model" (TP)
+  - parameters' d_model/d_ff input dims -> "data" (FSDP/ZeRO-3 style)
+  - attention replicated on "model" for archs whose head count does not
+    divide the model axis (smollm 15H, whisper 6H, qwen2-vl 28H) — noted in
+    each config.
+
+Rules are resolved per-leaf by path, with divisibility checked against the
+actual mesh so every (arch x mesh) pair lowers cleanly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def shard_hint(x, *spec):
+    """with_sharding_constraint that degrades to a no-op outside a mesh.
+
+    ('batch',) expands to the mesh's batch axes (('pod','data') multi-pod,
+    ('data',) single-pod). Perf iteration 1 (EXPERIMENTS §5): without these
+    hints XLA replicates logits/activation intermediates (6 TB temp on
+    llama3-405b train) and inserts full-tensor all-reduces."""
+    try:
+        from jax.sharding import PartitionSpec
+        from jax._src import mesh as mesh_lib
+
+        mesh = mesh_lib.thread_resources.env.physical_mesh
+        names = () if mesh.empty else mesh.axis_names
+        if "data" not in names:
+            return x
+        ba = ("pod", "data") if "pod" in names else ("data",)
+        resolved = tuple(
+            ba if s_ == "batch" else (s_ if s_ in names else None) for s_ in spec
+        )
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*resolved))
+    except Exception:
+        return x
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+# Perf iteration 3 (EXPERIMENTS §5): FSDP (weight sharding over the data
+# axis) pays a per-layer all-gather on every step. For models whose full
+# fp32 train state (p+g+m+v = 16 B/param) fits one chip's HBM with room for
+# activations, replicating weights across the data axis removes those
+# gathers entirely — the only cross-data collective left is the single
+# gradient all-reduce.
+FSDP_STATE_BYTES_THRESHOLD = 12e9
+
+
+def _use_fsdp(cfg: ModelConfig) -> bool:
+    import jax.numpy as jnp
+
+    per_param = (
+        2 * jnp.dtype(cfg.param_dtype).itemsize  # p + g
+        + 2 * jnp.dtype(cfg.opt_state_dtype).itemsize  # m + v
+    )
+    return cfg.param_count() * per_param > FSDP_STATE_BYTES_THRESHOLD
+
+
+def param_spec(cfg: ModelConfig, mesh: Mesh, path: str, shape) -> P:
+    """PartitionSpec for one parameter leaf (path is '/'-joined)."""
+    fsdp = "data" if _use_fsdp(cfg) else None
+    tp = "model"
+    nd = len(shape)
+    hd = cfg.resolved_head_dim
+
+    def ok(dim_size, axis):
+        return _div(dim_size, mesh, axis)
+
+    name = path.split("/")[-1]
+    stacked = path.startswith("blocks/") or path.startswith("encoder/")
+    pre = (None,) if stacked else ()
+    # how many leading stack dims (hybrid grouping adds none at init)
+    lead = 1 if stacked and nd >= 2 else 0
+
+    heads_shardable = cfg.num_heads > 0 and ok(cfg.num_heads, tp)
+
+    if name in ("embed", "lm_head") or path in ("embed", "lm_head"):
+        spec = [None] * nd
+        if ok(shape[0], tp):
+            spec[0] = tp
+        if ok(shape[1], fsdp):
+            spec[1] = fsdp
+        return P(*spec)
+
+    if name in ("wq", "wk", "wv"):
+        spec = [None] * nd
+        if ok(shape[lead], fsdp):
+            spec[lead] = fsdp
+        out_ok = heads_shardable if name == "wq" else ok(cfg.num_kv_heads, tp)
+        if out_ok and ok(shape[lead + 1], tp):
+            spec[lead + 1] = tp
+        return P(*spec)
+    if name == "wo":
+        spec = [None] * nd
+        if heads_shardable and ok(shape[lead], tp):
+            spec[lead] = tp
+        if ok(shape[lead + 1], fsdp):
+            spec[lead + 1] = fsdp
+        return P(*spec)
+    if name in ("wg", "wu"):  # (L?, [E,] D, F)
+        spec = [None] * nd
+        if ok(shape[-1], tp):
+            spec[-1] = tp
+        if ok(shape[-2], fsdp):
+            spec[-2] = fsdp
+        return P(*spec)
+    if name == "wd":  # (L?, [E,] F, D)
+        spec = [None] * nd
+        if ok(shape[-2], tp):
+            spec[-2] = tp
+        if ok(shape[-1], fsdp):
+            spec[-1] = fsdp
+        return P(*spec)
+    if name == "router":
+        spec = [None] * nd
+        if ok(shape[-2], fsdp):
+            spec[-2] = fsdp
+        return P(*spec)
+    if name == "w_in":  # (L, D, K)
+        spec = [None] * nd
+        if ok(shape[-2], fsdp):
+            spec[-2] = fsdp
+        if ok(shape[-1], tp):
+            spec[-1] = tp
+        return P(*spec)
+    if name == "w_out":  # (L, d_inner, D)
+        spec = [None] * nd
+        if ok(shape[-2], tp):
+            spec[-2] = tp
+        if ok(shape[-1], fsdp):
+            spec[-1] = fsdp
+        return P(*spec)
+    if name == "norm" and nd >= 2:  # ssm gated norm (L, d_inner)
+        spec = [None] * nd
+        if ok(shape[-1], tp):
+            spec[-1] = tp
+        return P(*spec)
+    # norms, scalars, biases: replicated
+    return P(*([None] * nd))
+
+
+def params_shardings(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """Map a params (shape-)pytree to NamedShardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        spath = "/".join(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        specs.append(
+            NamedSharding(mesh, param_spec(cfg, mesh, spath, leaf.shape))
+        )
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_shape) -> Any:
+    """Input batch: leading dim over (pod, data) when divisible."""
+    ba = batch_axes(mesh)
+    n_b = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def spec(leaf):
+        if leaf.shape and leaf.shape[0] % n_b == 0 and leaf.shape[0] > 1:
+            return NamedSharding(mesh, P(ba, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree.map(spec, batch_shape)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape, seq_sharded: bool):
+    """Decode cache: batch-sharded normally; seq-sharded for long_500k."""
+    ba = batch_axes(mesh)
+    n_b = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def spec(leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        if nd == 1:  # lengths
+            return NamedSharding(mesh, P(None))
+        # caches have a leading layer/group dim, batch at dim 1
+        if seq_sharded:
+            # shard the sequence dim (dim 2 of (L,B,S,KV,hd)) over data
+            if nd >= 3 and shp[2] % mesh.shape["data"] == 0 and shp[2] > 1:
+                return NamedSharding(
+                    mesh, P(*([None, None, "data"] + [None] * (nd - 3)))
+                )
+            return NamedSharding(mesh, P(*([None] * nd)))
+        if nd >= 2 and shp[1] % n_b == 0 and shp[1] > 1:
+            return NamedSharding(mesh, P(*([None, ba] + [None] * (nd - 2))))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree.map(spec, cache_shape)

@@ -1,0 +1,176 @@
+"""Mamba2 / SSD (state-space duality) block, chunked for the MXU.
+
+Implements the SSD algorithm of arXiv:2405.21060: within a chunk the
+sequence mixing is a (masked) matmul — MXU-friendly — and chunks are linked
+by a small recurrent state (B, H, P, N) scanned across chunk boundaries.
+Decode is the O(1)/token recurrence. A scalar-per-head A (Mamba2's
+restriction) keeps the decay terms rank-1.
+
+Shapes: d_inner = expand * d_model; H = d_inner / head_dim; P = head_dim;
+N = ssm_state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMParams(NamedTuple):
+    w_in: jnp.ndarray  # (D, 2*d_inner + 2*N + H)  -> x, z, B, C, dt
+    a_log: jnp.ndarray  # (H,)
+    d_skip: jnp.ndarray  # (H,)
+    dt_bias: jnp.ndarray  # (H,)
+    norm: jnp.ndarray  # (d_inner,)
+    w_out: jnp.ndarray  # (d_inner, D)
+
+
+def _split_proj(zxbcdt, d_inner, n_state, n_heads):
+    x, z, b, c, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + n_state, 2 * d_inner + 2 * n_state],
+        axis=-1,
+    )
+    return x, z, b, c, dt
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, P) inputs per head
+    dt: jnp.ndarray,  # (B, S, H) softplus'd step sizes
+    a: jnp.ndarray,  # (H,) negative decay rates
+    b_proj: jnp.ndarray,  # (B, S, N)
+    c_proj: jnp.ndarray,  # (B, S, N)
+    chunk: int = 256,
+    init_state=None,  # (B, H, P, N)
+):
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state)."""
+    bsz, s, h, p = x.shape
+    n = b_proj.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_proj = jnp.pad(b_proj, ((0, 0), (0, pad), (0, 0)))
+        c_proj = jnp.pad(c_proj, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = b_proj.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c_proj.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    da = dtc * a[None, None, None, :]  # (B,C,L,H) negative
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative log-decay
+    seg_total = cum[:, :, -1]  # (B,C,H)
+
+    def per_chunk(xc_, dtc_, bc_, cc_, da_, cum_):
+        # intra-chunk: y[t] = sum_{s<=t} C[t]·B[s] * exp(cum[t]-cum[s]) dt[s] x[s]
+        decay = jnp.exp(
+            cum_[:, :, None, :] - cum_[:, None, :, :]
+        )  # (B,L,L,H), t>=s valid
+        l_idx = jnp.arange(xc_.shape[1])
+        mask = (l_idx[:, None] >= l_idx[None, :]).astype(jnp.float32)
+        cb = jnp.einsum("btn,bsn->bts", cc_, bc_)  # (B,L,L)
+        w = cb[..., None] * decay * mask[None, :, :, None]  # (B,L,L,H)
+        xdt = xc_.astype(jnp.float32) * dtc_[..., None]  # (B,L,H,P)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xdt)
+        # chunk state contribution: K[s->end]
+        state_w = jnp.exp(cum_[:, -1:, :] - cum_) * dtc_  # (B,L,H)
+        new_state = jnp.einsum("bsn,bsh,bshp->bhpn", bc_, state_w, xc_.astype(jnp.float32))
+        return y_intra, new_state
+
+    y_intra, chunk_states = jax.vmap(
+        per_chunk, in_axes=(1, 1, 1, 1, 1, 1), out_axes=(1, 1)
+    )(xc, dtc, bc, cc, da, cum)
+
+    # inter-chunk: scan states across chunks
+    seg_decay = jnp.exp(seg_total)  # (B,C,H)
+
+    def scan_body(carry, inp):
+        state = carry  # (B,H,P,N)
+        s_new, dec = inp  # (B,H,P,N), (B,H)
+        out_state = state
+        state = state * dec[:, :, None, None] + s_new
+        return state, out_state
+
+    init = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        scan_body,
+        init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(seg_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,C,H,P,N)
+
+    # contribution of the incoming state to each position
+    y_state = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp", cc.reshape(bsz, nc, chunk, n), jnp.exp(cum), prev_states
+    )
+    y = (y_intra + y_state).reshape(bsz, nc * chunk, h, p)
+    if pad:
+        y = y[:, :s]
+    return y.astype(x.dtype), final_state
+
+
+def ssm_block(
+    params: SSMParams,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg,
+    init_state=None,
+):
+    """Full Mamba2 block: in-proj -> SSD -> gated RMSNorm -> out-proj."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params.w_in.astype(x.dtype))
+    xi, z, b, c, dt = _split_proj(zxbcdt, d_inner, n, h)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params.dt_bias)
+    a = -jnp.exp(params.a_log.astype(jnp.float32))
+    xh = xi.reshape(*xi.shape[:-1], h, cfg.ssm_head_dim)
+    y, state = ssd_chunked(xh, dt, a, b, c, chunk=cfg.ssm_chunk, init_state=init_state)
+    y = y + xh.astype(jnp.float32) * params.d_skip[None, None, :, None]
+    y = y.reshape(*xi.shape)
+    # gated RMSNorm (Mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)) * params.norm
+    return (
+        jnp.einsum("bsk,kd->bsd", y.astype(x.dtype), params.w_out.astype(x.dtype)),
+        state,
+    )
+
+
+def ssm_decode_step(
+    params: SSMParams,
+    x: jnp.ndarray,  # (B, 1, D)
+    state: jnp.ndarray,  # (B, H, P, N) float32
+    cfg,
+):
+    """O(1) recurrent decode: h' = h*exp(dt*A) + dt*B x ; y = C·h' + D x."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params.w_in.astype(x.dtype))
+    xi, z, b, c, dt = _split_proj(zxbcdt, d_inner, n, h)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params.dt_bias)[:, 0]  # (B,H)
+    a = -jnp.exp(params.a_log.astype(jnp.float32))
+    xh = xi[:, 0].reshape(-1, h, cfg.ssm_head_dim).astype(jnp.float32)  # (B,H,P)
+    bv = b[:, 0].astype(jnp.float32)  # (B,N)
+    cv = c[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])  # (B,H)
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, bv, dt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cv) + xh * params.d_skip[None, :, None]
+    y = y.reshape(x.shape[0], 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)) * params.norm
+    return (
+        jnp.einsum("bsk,kd->bsd", y.astype(x.dtype), params.w_out.astype(x.dtype)),
+        state,
+    )

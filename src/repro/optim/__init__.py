@@ -1,0 +1,18 @@
+"""Optimizer substrate: AdamW + cosine schedule + gradient compression."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.grad_compress import (
+    compress_int8,
+    decompress_int8,
+    error_feedback_update,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "compress_int8",
+    "decompress_int8",
+    "error_feedback_update",
+]

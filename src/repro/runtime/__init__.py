@@ -1,0 +1,5 @@
+"""Distributed runtime: elastic re-meshing + straggler mitigation."""
+from repro.runtime.elastic import ElasticMesh, plan_mesh
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = ["ElasticMesh", "plan_mesh", "StragglerMonitor"]

@@ -1,0 +1,76 @@
+"""Elastic scaling: rebuild the mesh from the live device set and reshard.
+
+At 1000+-node scale, node loss is routine. The recovery loop is:
+
+  1. a collective failure / health-check marks devices dead;
+  2. ``plan_mesh`` picks the largest valid (data, model) grid from the
+     surviving device count (model axis preserved — it is baked into the
+     weight sharding; the data axis shrinks);
+  3. the train state is restored from the latest checkpoint with the new
+     mesh's shardings (CheckpointManager.restore accepts any mesh);
+  4. the data pipeline re-slices by the new shard count (pure-function
+     batches make this exact);
+  5. step functions are re-jitted lazily on first call.
+
+On this CPU container the "failure" is injected by tests (device subset);
+the planning/resharding logic is identical on real hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def plan_mesh(
+    num_devices: int, model_parallel: int, pods: int = 1
+) -> tuple:
+    """Largest (pod, data, model) grid for the surviving device count.
+
+    The model axis is preserved (weight shardings depend on it); whole
+    data-parallel rows are dropped; pods shrink last."""
+    assert model_parallel >= 1
+    while pods >= 1:
+        per_pod = num_devices // pods
+        data = per_pod // model_parallel
+        if data >= 1:
+            return pods, data, model_parallel
+        pods -= 1
+    raise ValueError(
+        f"{num_devices} devices cannot host model_parallel={model_parallel}"
+    )
+
+
+@dataclasses.dataclass
+class ElasticMesh:
+    model_parallel: int
+    pods: int = 1
+    mesh: Optional[Mesh] = None
+
+    def build(self, devices: Optional[Sequence] = None) -> Mesh:
+        devices = list(devices if devices is not None else jax.devices())
+        pods, data, model = plan_mesh(len(devices), self.model_parallel, self.pods)
+        used = devices[: pods * data * model]
+        arr = np.array(used).reshape(pods, data, model)
+        if pods > 1:
+            self.mesh = Mesh(arr, ("pod", "data", "model"))
+        else:
+            self.mesh = Mesh(arr.reshape(data, model), ("data", "model"))
+        return self.mesh
+
+    def on_failure(self, dead: Sequence) -> Mesh:
+        """Rebuild the mesh without the dead devices (ids, dicts or Devices)."""
+        dead_set = {
+            d["id"] if isinstance(d, dict) else getattr(d, "id", d) for d in dead
+        }
+        alive = [d for d in jax.devices() if d.id not in dead_set]
+        return self.build(alive)
+
+    @property
+    def data_shards(self) -> int:
+        assert self.mesh is not None
+        shape = dict(self.mesh.shape)
+        return shape.get("data", 1) * shape.get("pod", 1)

@@ -1,0 +1,93 @@
+"""Graph substrate tests: CSR invariants, generators, dynamics, partition."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import (
+    CSRGraph,
+    from_edges,
+    make_dataset,
+    make_evolving_pair,
+    partition_contiguous,
+    rmat_graph,
+    powerlaw_graph,
+    road_graph,
+)
+from repro.graphs.csr import symmetrize
+from repro.graphs.partition import edge_balance
+
+
+@given(
+    n=st.integers(4, 64),
+    m=st.integers(0, 300),
+    seed=st.integers(0, 10),
+)
+@settings(max_examples=25, deadline=None)
+def test_from_edges_invariants(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    g = from_edges(src, dst, n)
+    g.validate()
+    # no self loops, deduped
+    es = g.edge_sources()
+    assert not np.any(es == g.neighbors)
+    keys = es * n + g.neighbors
+    assert len(np.unique(keys)) == len(keys)
+
+
+def test_rmat_shape():
+    g = rmat_graph(1000, 5000, seed=1)
+    assert g.num_vertices == 1000
+    assert g.num_edges <= 5000
+    assert g.num_edges > 3000  # dedup should not eat half
+    # power-law-ish: max degree much larger than mean
+    assert g.degrees.max() > 5 * g.avg_degree
+
+
+def test_rmat_skewed_a_valid():
+    # regression: a=0.65 used to produce negative quadrant probability
+    g = rmat_graph(500, 2000, a=0.65, seed=2)
+    assert g.num_edges > 1000
+
+
+def test_powerlaw_and_road():
+    g = powerlaw_graph(2000, 6000, seed=3)
+    assert g.num_vertices == 2000
+    r = road_graph(2500, seed=4)
+    assert abs(r.avg_degree - 4.0) < 1.0  # lattice ~4 + shortcuts
+
+
+def test_datasets_materialize():
+    for name in ["amazon", "comdblp"]:
+        g = make_dataset(name)
+        g.validate()
+        assert g.num_vertices > 1000
+
+
+def test_evolving_pair_protocol():
+    g = make_dataset("comdblp")
+    pair = make_evolving_pair(g, seed=0)
+    n = g.num_vertices
+    assert abs(pair.mask1.sum() - 0.8 * n) < 2
+    # run2 = run1 - 10% + 10%: total roughly preserved
+    assert abs(pair.mask2.sum() - (0.8 * n - 0.08 * n + 0.1 * n)) < 3
+    assert 0.8 < pair.vertex_overlap < 0.95
+    # id space preserved: edges only among masked vertices
+    for run, mask in [(pair.run1, pair.mask1), (pair.run2, pair.mask2)]:
+        src = run.edge_sources()
+        assert mask[src].all() and mask[run.neighbors].all()
+
+
+def test_partition_balance_and_coverage():
+    g = make_dataset("comdblp")
+    parts, assign = partition_contiguous(g, num_parts=4)
+    assert sum(p.num_edges for p in parts) == g.num_edges
+    assert edge_balance(parts) < 1.6
+    assert set(np.unique(assign)) <= {0, 1, 2, 3}
+
+
+def test_symmetrize():
+    g = from_edges([0, 1], [1, 2], 3)
+    u = symmetrize(g)
+    assert u.num_edges == 4

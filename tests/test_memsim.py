@@ -1,0 +1,149 @@
+"""Memory-hierarchy simulator: scan caches + chain classification vs
+brute-force Python references (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.memsim import (
+    SCALED,
+    cache_pass,
+    classify_prefetch_events,
+    evaluate,
+    simulate_demand,
+    simulate_with_prefetch,
+)
+from repro.memsim.config import CacheLevelConfig, HierarchyConfig
+
+
+def _naive_cache(blocks, sets, ways):
+    """Reference set-associative LRU cache."""
+    state = [dict() for _ in range(sets)]  # set -> {block: last_use}
+    t = 0
+    hits = np.zeros(len(blocks), dtype=bool)
+    for i, b in enumerate(blocks):
+        s = int(b) & (sets - 1)
+        d = state[s]
+        t += 1
+        if b in d:
+            hits[i] = True
+            d[b] = t
+        else:
+            if len(d) >= ways:
+                lru = min(d, key=d.get)
+                del d[lru]
+            d[b] = t
+    return hits
+
+
+@given(
+    n=st.integers(1, 400),
+    span=st.integers(4, 200),
+    sets=st.sampled_from([4, 8, 16]),
+    ways=st.sampled_from([2, 4]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=30, deadline=None)
+def test_cache_pass_matches_naive(n, span, sets, ways, seed):
+    rng = np.random.default_rng(seed)
+    blocks = rng.integers(0, span, n).astype(np.int64)
+    got = cache_pass(blocks, sets, ways)
+    ref = _naive_cache(blocks, sets, ways)
+    np.testing.assert_array_equal(got, ref)
+
+
+def _naive_pf_classify(blocks, is_pf, pos, hit, window):
+    """Brute-force pf-bit machine over per-line state."""
+    pf_bit, fill_pos, resident = {}, {}, {}
+    useful = np.zeros(len(blocks), bool)
+    late = np.zeros(len(blocks), bool)
+    redundant = np.zeros(len(blocks), bool)
+    for i, (b, f, p, h) in enumerate(zip(blocks, is_pf, pos, hit)):
+        if h:
+            if f:
+                redundant[i] = True  # pf bit survives
+            else:
+                if pf_bit.get(b, False):
+                    useful[i] = True
+                    if fill_pos.get(b, -1) > p:
+                        late[i] = True
+                pf_bit[b] = False
+        else:  # fill
+            pf_bit[b] = bool(f)
+            fill_pos[b] = p + window if f else 0
+    return useful, late, redundant
+
+
+@given(
+    n=st.integers(1, 300),
+    span=st.integers(2, 40),
+    pf_frac=st.floats(0.1, 0.9),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=30, deadline=None)
+def test_classification_matches_bruteforce(n, span, pf_frac, seed):
+    rng = np.random.default_rng(seed)
+    blocks = rng.integers(0, span, n).astype(np.int64)
+    is_pf = rng.random(n) < pf_frac
+    pos = np.sort(rng.integers(0, 4 * n, n)).astype(np.int64)
+    hit = cache_pass(blocks, 4, 2)
+    useful, late, red, early = classify_prefetch_events(
+        blocks, is_pf, pos, hit, window := 17
+    )[:4]
+    u2, l2, r2 = _naive_pf_classify(blocks, is_pf, pos, hit, window)
+    np.testing.assert_array_equal(useful, u2)
+    np.testing.assert_array_equal(late, l2)
+    np.testing.assert_array_equal(red, r2)
+
+
+@pytest.fixture(scope="module")
+def profile():
+    rng = np.random.default_rng(7)
+    blocks = rng.integers(0, 3000, 30_000).astype(np.int64)
+    iters = np.repeat(np.arange(3), 10_000).astype(np.int32)
+    return simulate_demand(blocks, iters, SCALED)
+
+
+def test_oracle_prefetcher_perfect(profile):
+    mp, mb = profile.l2_miss_pos, profile.l2_miss_blocks
+    out = simulate_with_prefetch(profile, mb, np.maximum(mp - 100, 0))
+    m = evaluate("oracle", profile, out, baseline_outcome=_nopf(profile), issuer=0)
+    assert m.accuracy > 0.95
+    assert m.coverage > 0.9
+    assert m.speedup > 1.0
+
+
+def _nopf(profile):
+    return simulate_with_prefetch(
+        profile, np.zeros(0, np.int64), np.zeros(0, np.int64)
+    )
+
+
+def test_empty_prefetcher_neutral(profile):
+    out = _nopf(profile)
+    m = evaluate("none", profile, out, baseline_outcome=_nopf(profile), issuer=0)
+    assert m.speedup == pytest.approx(1.0, abs=1e-6)
+    assert m.issued == 0 and m.useful == 0
+
+
+def test_garbage_prefetcher_hurts_traffic(profile):
+    rng = np.random.default_rng(9)
+    pf_b = rng.integers(10_000, 20_000, 5000).astype(np.int64)  # never demanded
+    pf_p = np.sort(rng.integers(0, 30_000, 5000)).astype(np.int64)
+    out = simulate_with_prefetch(profile, pf_b, pf_p)
+    m = evaluate("garbage", profile, out, baseline_outcome=_nopf(profile), issuer=0)
+    assert m.accuracy < 0.01
+    assert m.extra_traffic > 0.0
+    assert m.overpredicted > 4500
+    assert m.speedup < 1.01
+
+
+def test_eval_window_restricts_counts(profile):
+    mp, mb = profile.l2_miss_pos, profile.l2_miss_blocks
+    out = simulate_with_prefetch(profile, mb, np.maximum(mp - 100, 0))
+    m_all = evaluate("o", profile, out, baseline_outcome=_nopf(profile), issuer=0)
+    m_win = evaluate(
+        "o", profile, out, baseline_outcome=_nopf(profile), eval_from_pos=20_000,
+        issuer=0,
+    )
+    assert m_win.issued < m_all.issued
+    assert m_win.baseline_l2_misses < m_all.baseline_l2_misses

@@ -1,0 +1,92 @@
+"""Baseline prefetcher behaviors + workload driver invariants."""
+import numpy as np
+import pytest
+
+from repro.core import build_workload, run_prefetcher_suite
+from repro.core.prefetchers import SUITE
+from repro.core.prefetchers.simple import ideal_l2
+from repro.core.prefetchers.spatial import _majority_table, _window_dedupe
+from repro.core.prefetchers.temporal import _issue_with_hwm
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return build_workload("pgd", "comdblp")
+
+
+def test_driver_invariants(workload):
+    w = workload
+    assert w.num_accesses > 10_000
+    assert w.eval_from_pos == 0  # PGD evaluates the whole run
+    assert len(w.iter_epochs) == len(set(e for e, _ in w.iter_epochs))
+    mpos, mblocks, miters = w.baseline_miss_stream()
+    assert np.all(np.diff(mpos) >= 0)
+    assert len(mpos) < len(w.profile.l2_pos)
+    views = w.amc_iteration_views()
+    assert len(views) == len(w.iter_epochs)
+    t_lo = w.cfg_trace.target_range[0] >> 6
+    t_hi = (w.cfg_trace.target_range[0] + w.cfg_trace.target_range[1]) >> 6
+    for view, _ in views:
+        # target-range misses excluded from recording input
+        assert not np.any((view.miss_blocks >= t_lo) & (view.miss_blocks <= t_hi))
+        assert np.all(np.diff(view.target_pos) > 0)
+
+
+def test_bfs_workload_evaluates_second_run():
+    w = build_workload("bfs", "comdblp")
+    assert w.eval_from_pos > 0
+    epochs = [e for e, _ in w.iter_epochs]
+    assert set(epochs) == {0, 1}
+    # within-epoch indices restart at run 2
+    within = [k for _, k in w.iter_epochs]
+    assert within.count(0) == 2
+
+
+def test_ideal_prefetcher_dominates(workload):
+    res = run_prefetcher_suite(workload, {"ideal": ideal_l2})
+    m = res["ideal"]
+    assert m.coverage > 0.9 and m.accuracy > 0.9 and m.speedup > 1.2
+
+
+def test_all_baselines_produce_valid_streams(workload):
+    for name, gen in SUITE.items():
+        stream = gen(workload)
+        assert len(stream.blocks) == len(stream.pos), name
+        if len(stream.pos):
+            assert stream.pos.min() >= 0, name
+            assert stream.blocks.min() >= 0, name
+
+
+def test_hwm_dedupe():
+    lo, counts = _issue_with_hwm(np.array([0, 1, 2, 10]), degree=4, stream_len=20)
+    # trigger 0 issues 1..4; trigger 1 issues 5 only; trigger 2 issues 6;
+    # trigger 10 issues 11..14
+    np.testing.assert_array_equal(counts, [4, 1, 1, 4])
+    np.testing.assert_array_equal(lo, [1, 5, 6, 11])
+
+
+def test_window_dedupe():
+    blocks = np.array([5, 5, 5, 9])
+    pos = np.array([0, 10, 5000, 20])
+    keep = _window_dedupe(blocks, pos, window=100)
+    np.testing.assert_array_equal(keep, [True, False, True, True])
+
+
+def test_majority_table():
+    keys = np.array([1, 1, 1, 2, 2, 3])
+    nxt = np.array([7, 7, 8, 9, 9, 5])
+    k, v = _majority_table(keys, nxt)
+    np.testing.assert_array_equal(k, [1, 2, 3])
+    assert v[0] == 7 and v[1] == 9 and v[2] == 5
+
+
+def test_rnr_records_once_amc_rerecords():
+    """The core AMC-vs-RnR distinction on an evolving workload."""
+    from repro.core.amc import AMCConfig, AMCPrefetcher
+    from repro.core.prefetchers.rnr import rnr
+
+    w = build_workload("pgd", "comdblp")
+    res = run_prefetcher_suite(
+        w, {"amc": AMCPrefetcher(AMCConfig()).generate, "rnr": rnr}
+    )
+    assert res["amc"].coverage > 2 * res["rnr"].coverage

@@ -1,0 +1,201 @@
+"""Layer-level correctness: SSD scan, MoE dispatch, blocked attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import blocked_attention, decode_attention
+from repro.models.moe import MoEParams, moe_ffn, route_topk
+from repro.models.ssm import SSMParams, ssd_chunked, ssm_block, ssm_decode_step
+
+
+# ----------------------------- SSD -----------------------------
+
+
+def _ssd_naive(x, dt, a, b, c):
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    y = np.zeros((bsz, s, h, p), np.float32)
+    for bi in range(bsz):
+        state = np.zeros((h, p, n), np.float32)
+        for t in range(s):
+            for hi in range(h):
+                decay = np.exp(dt[bi, t, hi] * a[hi])
+                state[hi] = state[hi] * decay + np.outer(
+                    x[bi, t, hi] * dt[bi, t, hi], b[bi, t]
+                )
+                y[bi, t, hi] = state[hi] @ c[bi, t]
+    return y
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    rng = np.random.default_rng(0)
+    bsz, s, h, p, n = 2, 50, 3, 8, 4
+    x = rng.normal(size=(bsz, s, h, p)).astype(np.float32)
+    dt = rng.uniform(0.1, 0.8, (bsz, s, h)).astype(np.float32)
+    a = -rng.uniform(0.3, 1.5, h).astype(np.float32)
+    b = rng.normal(size=(bsz, s, n)).astype(np.float32)
+    c = rng.normal(size=(bsz, s, n)).astype(np.float32)
+    y, state = ssd_chunked(
+        jnp.asarray(x), jnp.asarray(dt), jnp.asarray(a), jnp.asarray(b),
+        jnp.asarray(c), chunk=16,
+    )
+    ref = _ssd_naive(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_decode_consistent_with_chunked():
+    """Running T decode steps == running the chunked scan over T tokens."""
+    cfg = get_config("mamba2_780m").reduced()
+    from repro.models.model import init_params
+
+    params = init_params(cfg, jax.random.PRNGKey(1))["blocks"]["ssm"]
+    lp = SSMParams(**{k: params[k][0] for k in SSMParams._fields})
+    rng = np.random.default_rng(2)
+    T, B = 12, 2
+    x = jnp.asarray(rng.normal(size=(B, T, cfg.d_model)) * 0.3, jnp.float32)
+    y_full, _ = ssm_block(lp, x, cfg)
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_head_dim
+    state = jnp.zeros((B, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    ys = []
+    for t in range(T):
+        yt, state = ssm_decode_step(lp, x[:, t : t + 1], state, cfg)
+        ys.append(yt)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_dec), np.asarray(y_full), rtol=3e-3, atol=3e-3
+    )
+
+
+# ----------------------------- MoE -----------------------------
+
+
+def _moe_dense_ref(x, p: MoEParams, top_k):
+    """Reference: run every expert densely, combine top-k."""
+    logits = x.astype(np.float32) @ np.asarray(p.router, np.float32)
+    order = np.argsort(-logits, axis=-1)[:, :top_k]
+    w = np.take_along_axis(logits, order, axis=-1)
+    w = np.exp(w - w.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    y = np.zeros_like(np.asarray(x, np.float32))
+    for e in range(p.router.shape[1]):
+        g = x @ np.asarray(p.w_gate[e])
+        u = x @ np.asarray(p.w_up[e])
+        h = (g / (1 + np.exp(-g))) * u
+        ye = h @ np.asarray(p.w_down[e])
+        for k in range(top_k):
+            sel = order[:, k] == e
+            y[sel] += w[sel, k : k + 1] * ye[sel]
+    return y
+
+
+def test_moe_dispatch_matches_dense_reference():
+    rng = np.random.default_rng(3)
+    n, d, f, e, k = 32, 16, 24, 4, 2
+    p = MoEParams(
+        router=jnp.asarray(rng.normal(size=(d, e)) * 0.5, jnp.float32),
+        w_gate=jnp.asarray(rng.normal(size=(e, d, f)) * 0.2, jnp.float32),
+        w_up=jnp.asarray(rng.normal(size=(e, d, f)) * 0.2, jnp.float32),
+        w_down=jnp.asarray(rng.normal(size=(e, f, d)) * 0.2, jnp.float32),
+    )
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y, aux, plan = moe_ffn(x, p, k, capacity_factor=4.0)  # no drops
+    ref = _moe_dense_ref(np.asarray(x), p, k)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_moe_recorded_plan_exact_when_routing_stable():
+    """AMC recorded-dispatch: replaying the previous step's plan is exact
+    when the routing did not change (DESIGN.md §2.2)."""
+    rng = np.random.default_rng(4)
+    n, d, f, e, k = 16, 8, 12, 4, 2
+    p = MoEParams(
+        router=jnp.asarray(rng.normal(size=(d, e)), jnp.float32),
+        w_gate=jnp.asarray(rng.normal(size=(e, d, f)) * 0.2, jnp.float32),
+        w_up=jnp.asarray(rng.normal(size=(e, d, f)) * 0.2, jnp.float32),
+        w_down=jnp.asarray(rng.normal(size=(e, f, d)) * 0.2, jnp.float32),
+    )
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y1, _, plan = moe_ffn(x, p, k, capacity_factor=4.0)
+    y2, _, _ = moe_ffn(x, p, k, capacity_factor=4.0, recorded_plan=plan)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+    # changed input: stale slots are zero-weighted, never wrong values
+    x3 = x.at[0].set(-x[0])
+    y3, _, _ = moe_ffn(x3, p, k, capacity_factor=4.0, recorded_plan=plan)
+    y3_exact, _, _ = moe_ffn(x3, p, k, capacity_factor=4.0)
+    # rows whose routing is unchanged agree exactly
+    idx1, _, _ = route_topk(x3, p.router, k)
+    idx0, _, _ = route_topk(x, p.router, k)
+    stable = np.asarray((idx1 == idx0).all(axis=1))
+    np.testing.assert_allclose(
+        np.asarray(y3)[stable[: n]], np.asarray(y3_exact)[stable[: n]],
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+# --------------------------- attention ---------------------------
+
+
+def test_blocked_attention_matches_naive():
+    rng = np.random.default_rng(5)
+    b, s, h, kv, hd = 2, 100, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    out = blocked_attention(q, k, v, causal=True, block_size=32)
+    # naive
+    from repro.kernels.flash_attn.ref import attention_ref
+
+    kr = jnp.repeat(k, h // kv, axis=2)
+    vr = jnp.repeat(v, h // kv, axis=2)
+    ref = attention_ref(
+        jnp.moveaxis(q, 2, 1).reshape(b * h, s, hd),
+        jnp.moveaxis(kr, 2, 1).reshape(b * h, s, hd),
+        jnp.moveaxis(vr, 2, 1).reshape(b * h, s, hd),
+        causal=True,
+    )
+    ref = jnp.moveaxis(ref.reshape(b, h, s, hd), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_sliding_window_blocked_vs_ref():
+    rng = np.random.default_rng(6)
+    b, s, h, hd, win = 1, 90, 2, 8, 24
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    out = blocked_attention(q, k, v, causal=True, sliding_window=win, block_size=32)
+    from repro.kernels.flash_attn.ref import attention_ref
+
+    ref = attention_ref(
+        jnp.moveaxis(q, 2, 1).reshape(b * h, s, hd),
+        jnp.moveaxis(k, 2, 1).reshape(b * h, s, hd),
+        jnp.moveaxis(v, 2, 1).reshape(b * h, s, hd),
+        causal=True,
+        sliding_window=win,
+    )
+    ref = jnp.moveaxis(ref.reshape(b, h, s, hd), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_decode_attention_matches_full():
+    """Decode-with-cache at position t == full causal attention row t."""
+    rng = np.random.default_rng(7)
+    b, s, h, kv, hd = 2, 24, 4, 2, 8
+    q_all = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k_all = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v_all = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    full = blocked_attention(q_all, k_all, v_all, causal=True, block_size=8)
+    t = s - 1
+    out = decode_attention(
+        q_all[:, t : t + 1],
+        k_all,
+        v_all,
+        cache_len=jnp.full((b,), t + 1, jnp.int32),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out[:, 0]), np.asarray(full[:, t]), rtol=1e-4, atol=1e-5
+    )

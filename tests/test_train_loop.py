@@ -1,0 +1,34 @@
+"""End-to-end training-loop integration: the real launcher, few steps."""
+import numpy as np
+import pytest
+
+
+@pytest.mark.slow
+def test_train_launcher_loss_decreases_and_resumes(tmp_path):
+    from repro.launch.train import main as train_main
+
+    ckpt = str(tmp_path / "ckpt")
+    args = [
+        "--arch", "smollm_360m", "--reduced",
+        "--batch", "4", "--seq", "64",
+        "--ckpt-dir", ckpt, "--ckpt-every", "10",
+        "--log-every", "50",
+    ]
+    losses = train_main(args + ["--steps", "20"])
+    assert losses[-1] < losses[0]
+    # resume from step 20 and continue to 25
+    losses2 = train_main(args + ["--steps", "25"])
+    assert len(losses2) == 5  # resumed, not restarted
+    assert np.isfinite(losses2).all()
+
+
+@pytest.mark.slow
+def test_serve_launcher_generates(tmp_path):
+    from repro.launch.serve import main as serve_main
+
+    gen = serve_main(
+        ["--arch", "qwen3_4b", "--reduced", "--batch", "2",
+         "--prompt-len", "4", "--gen", "4"]
+    )
+    assert gen.shape == (2, 4)
+    assert np.isfinite(gen).all()
