@@ -9,6 +9,9 @@ run before committing silicon parameters:
   - storage_fraction     (paper: 20% reserve, §IV-A)
   - match_pairs          (strict (prev,cur) CAM match vs trigger-only)
 
+All variants run in one declarative ``Experiment`` against a single cached
+workload build.
+
     PYTHONPATH=src python -m benchmarks.ablations [--dataset comdblp]
 """
 from __future__ import annotations
@@ -25,11 +28,8 @@ def main():
     ap.add_argument("--out", default="results/ablations.json")
     args = ap.parse_args()
 
-    from repro.core import build_workload, run_prefetcher_suite
-    from repro.core.amc import AMCConfig, AMCPrefetcher
+    from repro.core import Experiment, WorkloadSpec, get_prefetcher
 
-    w = build_workload(args.kernel, args.dataset)
-    grid = []
     base = dict(
         max_misses_per_entry=20,
         lookahead_accesses=90,
@@ -42,34 +42,42 @@ def main():
         "storage_fraction": [0.1, 0.25, 0.5, 1.0],
         "match_pairs": [False, True],
     }
-    rows = []
+    # One declarative experiment: the workload is built once (cached) and
+    # every AMC variant is instantiated from the registry with overrides.
+    amc = get_prefetcher("amc")
+    variants = []
     for knob, values in sweeps.items():
         for v in values:
-            kw = dict(base)
-            kw[knob] = v
-            cfg = AMCConfig(**kw, name=f"amc[{knob}={v}]")
-            m = run_prefetcher_suite(w, {cfg.name: AMCPrefetcher(cfg).generate})[
-                cfg.name
-            ]
-            row = dict(
-                knob=knob,
-                value=v,
-                speedup=round(m.speedup, 3),
-                coverage=round(m.coverage, 3),
-                accuracy=round(m.accuracy, 3),
-                late=m.late,
-                evicted_early=m.evicted_early,
-                metadata_traffic=round(m.metadata_traffic, 3),
-                storage_peak_frac=round(
-                    m.info.get("storage_peak_bytes", 0) / w.input_bytes, 3
-                ),
-            )
-            rows.append(row)
-            print(
-                f"{knob}={v!s:>6}: speedup {row['speedup']:.2f} "
-                f"cov {row['coverage']:.2f} acc {row['accuracy']:.2f} "
-                f"late {row['late']} meta {row['metadata_traffic']:.2f}"
-            )
+            name = f"amc[{knob}={v}]"
+            variants.append((knob, v, name, amc.instantiate(name=name, **{**base, knob: v})))
+    result = Experiment(
+        workloads=[WorkloadSpec(args.kernel, args.dataset)],
+        prefetchers=[(name, gen) for _, _, name, gen in variants],
+    ).run(verbose=True)  # incremental progress; detailed rows printed below
+    w = result.workload(args.kernel, args.dataset)
+
+    rows = []
+    for knob, v, name, _ in variants:
+        m = result.metrics(prefetcher=name)
+        row = dict(
+            knob=knob,
+            value=v,
+            speedup=round(m.speedup, 3),
+            coverage=round(m.coverage, 3),
+            accuracy=round(m.accuracy, 3),
+            late=m.late,
+            evicted_early=m.evicted_early,
+            metadata_traffic=round(m.metadata_traffic, 3),
+            storage_peak_frac=round(
+                m.info.get("storage_peak_bytes", 0) / w.input_bytes, 3
+            ),
+        )
+        rows.append(row)
+        print(
+            f"{knob}={v!s:>6}: speedup {row['speedup']:.2f} "
+            f"cov {row['coverage']:.2f} acc {row['accuracy']:.2f} "
+            f"late {row['late']} meta {row['metadata_traffic']:.2f}"
+        )
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump({"workload": f"{args.kernel}/{args.dataset}", "rows": rows}, f, indent=1)

@@ -1,5 +1,7 @@
 """Full prefetcher sweep: every (kernel, dataset) x every prefetcher.
 
+Each workload cell is one declarative ``Experiment`` over the registry-named
+prefetcher list; the workload trace is built once and shared by all of them.
 Produces one JSON per workload under ``results/`` (resumable — existing
 files are skipped). All paper figures (Figs 8-16) are assembled from these
 JSONs by the per-figure benchmark modules.
@@ -54,10 +56,7 @@ def miss_size_histogram(workload) -> dict:
 
 
 def run_workload(kernel: str, dataset: str, out_dir: str, prefetchers=None):
-    from repro.core import build_workload, run_prefetcher_suite
-    from repro.core.amc import AMCPrefetcher, AMCConfig
-    from repro.core.prefetchers import SUITE
-    from repro.core.prefetchers.simple import ideal_l2
+    from repro.core import Experiment
 
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"{kernel}_{dataset}.json")
@@ -66,11 +65,12 @@ def run_workload(kernel: str, dataset: str, out_dir: str, prefetchers=None):
         return
 
     t0 = time.time()
-    w = build_workload(kernel, dataset)
-    gen = {"amc": AMCPrefetcher(AMCConfig()).generate, "ideal": ideal_l2}
-    gen.update(SUITE)
-    names = prefetchers or PREFETCHERS
-    res = run_prefetcher_suite(w, {n: gen[n] for n in names})
+    names = list(prefetchers or PREFETCHERS)
+    result = Experiment(
+        kernels=[kernel], datasets=[dataset], prefetchers=names
+    ).run()
+    res = result.suite(kernel, dataset)
+    w = result.workload(kernel, dataset)
     base = w.profile.baseline_counts(w.eval_from_pos)
     out = {
         "kernel": kernel,

@@ -14,8 +14,7 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_workload, run_prefetcher_suite
-from repro.core.amc import AMCConfig, AMCPrefetcher
+from repro.core import Experiment
 from repro.graphs import make_dataset, make_evolving_pair
 from repro.kernels.amc_gather.ops import AMCGatherSession
 
@@ -65,11 +64,10 @@ def amc_gather_demo():
 
 def main():
     print("=== BFS on evolving graph (paper §VI protocol) ===")
-    w = build_workload("bfs", "notredame")
-    res = run_prefetcher_suite(
-        w, {"amc": AMCPrefetcher(AMCConfig()).generate}
-    )
-    m = res["amc"]
+    result = Experiment(
+        kernels=["bfs"], datasets=["notredame"], prefetchers=["amc"]
+    ).run()
+    m = result.metrics(prefetcher="amc")
     print(
         f"run-2 evaluation: speedup {m.speedup:.2f}x, "
         f"coverage {m.coverage:.0%}, accuracy {m.accuracy:.0%}, "

@@ -1,8 +1,10 @@
 """Quickstart: AMC prefetcher on PageRankDelta, 2 minutes on CPU.
 
-Builds a small evolving-graph workload, runs the composite simulation
-(baseline next-line vs next-line + AMC), and prints the paper's headline
-metrics. Uses the AMC programming interface exactly as Algorithm 1 does.
+Declares one `Experiment` cell (PGD on comdblp, AMC vs VLDP), runs the
+composite simulation (baseline next-line vs next-line + X), and prints the
+paper's headline metrics. Workload construction — including the AMC
+programming interface exactly as Algorithm 1 uses it — is owned by the
+declarative `WorkloadSpec` inside the experiment.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,37 +12,32 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
-from repro.core import build_workload, run_prefetcher_suite
-from repro.core.amc import AMCConfig, AMCPrefetcher
-from repro.core.prefetchers import SUITE
+from repro.core import Experiment
 
 
 def main():
     # comdblp is the smallest Table VII dataset — fast on CPU.
-    w = build_workload("pgd", "comdblp")
+    result = Experiment(
+        kernels=["pgd"], datasets=["comdblp"], prefetchers=["amc", "vldp"]
+    ).run()
+    w = result.workload("pgd", "comdblp")
     print(
         f"workload: PGD on {w.dataset} "
         f"({w.num_accesses:,} accesses, {len(w.iter_epochs)} iterations)"
     )
-    # The programming model (paper Table V) is already configured by the
-    # driver exactly as Algorithm 1 lines 7-8, 21, 27:
+    # The programming model (paper Table V) was configured by the workload
+    # spec exactly as Algorithm 1 lines 7-8, 21, 27:
     sess = w.session
     print(
         f"AMC registers: target@0x{sess.regs.target_base:x} "
         f"frontier@0x{sess.regs.frontier_base:x}"
     )
 
-    suite = {
-        "amc": AMCPrefetcher(AMCConfig()).generate,
-        "vldp": SUITE["vldp"],
-    }
-    results = run_prefetcher_suite(w, suite)
     print(f"\n{'prefetcher':<10} {'speedup':>8} {'coverage':>9} {'accuracy':>9}")
-    for name, m in results.items():
-        print(f"{name:<10} {m.speedup:>8.2f} {m.coverage:>9.2%} {m.accuracy:>9.2%}")
-    amc = results["amc"]
+    for cell in result.cells:
+        m = cell.metrics
+        print(f"{cell.prefetcher:<10} {m.speedup:>8.2f} {m.coverage:>9.2%} {m.accuracy:>9.2%}")
+    amc = result.metrics(prefetcher="amc")
     print(
         f"\nAMC metadata: compression ratio "
         f"{amc.info['compression_ratio']:.2f}, "

@@ -1,5 +1,15 @@
 """The paper's primary contribution: the AMC prefetcher system.
 
+Public API
+----------
+  Experiment / ExperimentResult -- declarative (kernel x dataset x
+                  prefetcher) evaluation grid with workload caching
+  WorkloadSpec / build_workload -- declarative workload construction
+                  (Algorithm-1 AMC session wiring included)
+  registry      -- ``@register_prefetcher`` + ``get_prefetcher``: every
+                  evaluated prefetcher (AMC and the seven Table I
+                  baselines) is resolvable by name
+
 Subpackages:
   amc          -- Access-to-Miss Correlation prefetcher (recording, BaseΔ
                   compression, AMC Cache model, programming interface)
@@ -7,7 +17,45 @@ Subpackages:
                   Bingo, RnR, Domino, DROPLET/Prodigy model)
   driver       -- the composite-run workload driver tying apps, traces,
                   memsim and prefetchers together
-"""
-from repro.core.driver import WorkloadTrace, build_workload, run_prefetcher_suite
+  experiment   -- the Experiment builder and per-stream scoring
 
-__all__ = ["WorkloadTrace", "build_workload", "run_prefetcher_suite"]
+Deprecated (thin shims, see ``prefetchers/__init__.py`` for the policy):
+``run_prefetcher_suite`` and ``repro.core.prefetchers.SUITE``.
+"""
+from repro.core.driver import (
+    WorkloadSpec,
+    WorkloadTrace,
+    build_workload,
+    run_prefetcher_suite,
+)
+from repro.core.experiment import (
+    CellResult,
+    Experiment,
+    ExperimentResult,
+    WorkloadCache,
+    score_prefetcher,
+)
+from repro.core.registry import (
+    Prefetcher,
+    PrefetcherSpec,
+    get_prefetcher,
+    list_prefetchers,
+    register_prefetcher,
+)
+
+__all__ = [
+    "WorkloadSpec",
+    "WorkloadTrace",
+    "build_workload",
+    "run_prefetcher_suite",
+    "CellResult",
+    "Experiment",
+    "ExperimentResult",
+    "WorkloadCache",
+    "score_prefetcher",
+    "Prefetcher",
+    "PrefetcherSpec",
+    "get_prefetcher",
+    "list_prefetchers",
+    "register_prefetcher",
+]

@@ -60,15 +60,40 @@ class AMCSession:
 
     def addr_t_base(self, addr: int, size: int, elem_size: int = 8) -> None:
         assert self.active, "AMC.init() first"
+        if elem_size < 1:
+            raise ValueError(f"target elem_size must be >= 1, got {elem_size}")
+        # Validate against the declared frontier range BEFORE committing, so
+        # a rejected call leaves the session's registers untouched.
+        if self.regs.frontier_base is not None:
+            self._validate_elem_ratio(int(elem_size), self.regs.frontier_elem_size)
         self.regs.target_base = int(addr)
         self.regs.target_size = int(size)
         self.regs.target_elem_size = int(elem_size)
 
     def addr_f_base(self, addr: int, size: int, elem_size: int = 1) -> None:
         assert self.active, "AMC.init() first"
+        if elem_size < 1:
+            raise ValueError(f"frontier elem_size must be >= 1, got {elem_size}")
+        if self.regs.target_base is not None:
+            self._validate_elem_ratio(self.regs.target_elem_size, int(elem_size))
         self.regs.frontier_base = int(addr)
         self.regs.frontier_size = int(size)
         self.regs.frontier_elem_size = int(elem_size)
+
+    @staticmethod
+    def _validate_elem_ratio(target_elem_size: int, frontier_elem_size: int) -> None:
+        """Once both ranges are declared, the §V-C2 address calculation
+        scales frontier deltas by target_elem_size // frontier_elem_size —
+        reject non-divisible sizes up front instead of truncating silently."""
+        if target_elem_size % frontier_elem_size:
+            raise ValueError(
+                f"AMC address calculation requires target_elem_size "
+                f"({target_elem_size}) to be an integer multiple of "
+                f"frontier_elem_size ({frontier_elem_size}); the §V-C2 "
+                "scaling target_delta = frontier_delta * "
+                "(target_elem_size // frontier_elem_size) would silently "
+                "truncate"
+            )
 
     def update(self) -> None:
         """Iteration boundary: enable prefetching, swap metadata roles,
@@ -102,8 +127,15 @@ class AMCSession:
     def address_calculation(self, frontier_addr: int) -> int:
         """§V-C2: target_delta = frontier_delta * (target_size/frontier_size)."""
         r = self.regs
+        ratio, rem = divmod(r.target_elem_size, r.frontier_elem_size)
+        if rem:
+            # Registers mutated after the AddrXBase validation — same hazard.
+            raise ValueError(
+                f"non-divisible element sizes ({r.target_elem_size} vs "
+                f"{r.frontier_elem_size}): §V-C2 scaling would truncate"
+            )
         fdelta = frontier_addr - r.frontier_base
-        return r.target_base + fdelta * (r.target_elem_size // r.frontier_elem_size)
+        return r.target_base + fdelta * ratio
 
     @property
     def configured(self) -> bool:

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core.amc.compression import CompressionStats, select_modes
 from repro.core.amc.storage import AMCEntryTable, AMCStorage, INDEX_ENTRY_BYTES
+from repro.core.registry import register_prefetcher
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,6 +231,19 @@ class AMCPrefetcher:
                 metadata_write_bytes=storage.write_bytes,
             ),
         )
+
+
+@register_prefetcher(
+    "amc",
+    trains_on="target_access+baseline_l2_miss",
+    storage="20% off-chip reserve + 24KB AMC Cache",
+    family="amc",
+    configurable=True,
+    description="Access-to-Miss Correlation prefetcher (the paper's design)",
+)
+def amc(**overrides):
+    """Factory: AMC stream generator with :class:`AMCConfig` overrides."""
+    return AMCPrefetcher(AMCConfig(**overrides)).generate
 
 
 def _intra_rank(counts: np.ndarray) -> np.ndarray:

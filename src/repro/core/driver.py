@@ -3,12 +3,21 @@
 One :class:`WorkloadTrace` per (kernel, dataset) bundles the full access
 trace, the shared demand profile, and the composite *baseline run* (demand +
 next-line, per the paper's Table VI L2). Prefetchers consume it through
-``amc_iteration_views()`` (AMC) or the raw substream accessors (baselines),
-and ``run_prefetcher_suite`` scores each against the baseline run.
+``amc_iteration_views()`` (AMC) or the raw substream accessors (baselines).
+
+Construction is declared by a :class:`WorkloadSpec` — kernel, dataset,
+hierarchy, seed, and the AMC programming-model parameters (Table V element
+sizes) in one frozen value, validated up front.  ``WorkloadSpec.build()``
+(or the ``build_workload`` convenience wrapper) produces the trace with the
+:class:`AMCSession` wired exactly as Algorithm 1 does.
+
+Scoring lives in :mod:`repro.core.experiment`; the ``run_prefetcher_suite``
+function kept here is a thin deprecation shim over it.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -18,13 +27,12 @@ from repro.apps.ligra import AppRun
 from repro.apps.trace import F_ID, T_ID, TraceConfig, concat_traces
 from repro.core.amc.api import AMCSession
 from repro.core.amc.prefetcher import IterationView, PrefetchStream
-from repro.graphs import make_dataset, make_evolving_pair
+from repro.graphs import DATASETS, make_dataset, make_evolving_pair
 from repro.memsim import (
     SCALED,
     DemandProfile,
     HierarchyConfig,
     PrefetchMetrics,
-    evaluate,
     simulate_demand,
     simulate_with_prefetch,
 )
@@ -35,8 +43,57 @@ from repro.memsim.hierarchy import PrefetchOutcome
 TWO_RUN_KERNELS = ("bfs", "bellmanford")
 
 
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Declarative description of one (kernel, dataset) workload cell.
+
+    Folds the AMC programming-model configuration (paper Table V: the
+    target/frontier element sizes behind ``AddrTBase``/``AddrFBase``) into
+    the workload declaration, so Algorithm-1 wiring is validated here once
+    instead of being hand-sequenced at every call site.  Hashable — used as
+    the workload-cache key by :class:`repro.core.experiment.Experiment`.
+    """
+
+    kernel: str
+    dataset: str
+    hierarchy: HierarchyConfig = SCALED
+    seed: int = 0
+    target_elem_size: int = 8  # vertex property width (AddrTBase)
+    frontier_elem_size: int = 1  # frontier flag width (AddrFBase)
+
+    def __post_init__(self):
+        if self.target_elem_size < 1 or self.frontier_elem_size < 1:
+            raise ValueError("element sizes must be >= 1 byte")
+        if self.target_elem_size % self.frontier_elem_size:
+            raise ValueError(
+                f"target_elem_size ({self.target_elem_size}) must be an "
+                f"integer multiple of frontier_elem_size "
+                f"({self.frontier_elem_size}): the §V-C2 address calculation "
+                "scales by their integer ratio and would silently truncate"
+            )
+
+    def validate_names(self) -> None:
+        """Check kernel/dataset against the registries. Called before the
+        app is run from names; skipped when caller-supplied ``runs`` make
+        the names purely descriptive."""
+        if self.kernel not in KERNELS:
+            raise ValueError(
+                f"unknown kernel {self.kernel!r}; available: {sorted(KERNELS)}"
+            )
+        if self.dataset not in DATASETS:
+            raise ValueError(
+                f"unknown dataset {self.dataset!r}; available: {sorted(DATASETS)}"
+            )
+
+    def build(self, runs: Optional[List[AppRun]] = None) -> "WorkloadTrace":
+        if runs is None:
+            self.validate_names()
+        return _build_workload(self, runs)
+
+
 @dataclasses.dataclass
 class WorkloadTrace:
+    spec: WorkloadSpec
     kernel: str
     dataset: str
     cfg_trace: TraceConfig
@@ -144,13 +201,45 @@ def _run_app(kernel: str, dataset: str, seed: int = 0):
 
 
 def build_workload(
-    kernel: str,
-    dataset: str,
+    kernel,
+    dataset: Optional[str] = None,
     hierarchy: HierarchyConfig = SCALED,
     seed: int = 0,
     runs: Optional[List[AppRun]] = None,
+    *,
+    target_elem_size: int = 8,
+    frontier_elem_size: int = 1,
 ) -> WorkloadTrace:
-    runs = runs if runs is not None else _run_app(kernel, dataset, seed)
+    """Build a workload trace. Accepts a :class:`WorkloadSpec` or the legacy
+    positional ``(kernel, dataset, ...)`` form."""
+    if isinstance(kernel, WorkloadSpec):
+        if (
+            dataset is not None
+            or hierarchy is not SCALED
+            or seed != 0
+            or target_elem_size != 8
+            or frontier_elem_size != 1
+        ):
+            raise ValueError(
+                "build_workload(spec) takes all configuration from the "
+                "WorkloadSpec; don't pass dataset/hierarchy/seed/elem-size "
+                "arguments alongside it"
+            )
+        return kernel.build(runs=runs)
+    spec = WorkloadSpec(
+        kernel=kernel,
+        dataset=dataset,
+        hierarchy=hierarchy,
+        seed=seed,
+        target_elem_size=target_elem_size,
+        frontier_elem_size=frontier_elem_size,
+    )
+    return spec.build(runs=runs)
+
+
+def _build_workload(spec: WorkloadSpec, runs: Optional[List[AppRun]]) -> WorkloadTrace:
+    kernel, dataset, hierarchy = spec.kernel, spec.dataset, spec.hierarchy
+    runs = runs if runs is not None else _run_app(kernel, dataset, spec.seed)
     # Shared address layout across runs (same id space - evolve.py keeps it).
     g = runs[0].graph
     cfg_trace = TraceConfig(
@@ -191,15 +280,17 @@ def build_workload(
         second_first_iter = run_start_iter[1]
         eval_from = int(np.searchsorted(iter_id, second_first_iter))
 
-    # Programming-model session, configured exactly as Algorithm 1 does.
+    # Programming-model session, configured exactly as Algorithm 1 does —
+    # element sizes come from the declarative spec (Table V wiring).
     sess = AMCSession()
     sess.init(asid=0)
     t_base, t_size = cfg_trace.target_range
     f_base, f_size = cfg_trace.frontier_range
-    sess.addr_t_base(t_base, t_size, elem_size=8)
-    sess.addr_f_base(f_base, f_size, elem_size=1)
+    sess.addr_t_base(t_base, t_size, elem_size=spec.target_elem_size)
+    sess.addr_f_base(f_base, f_size, elem_size=spec.frontier_elem_size)
 
     return WorkloadTrace(
+        spec=spec,
         kernel=kernel,
         dataset=dataset,
         cfg_trace=cfg_trace,
@@ -222,33 +313,21 @@ def run_prefetcher_suite(
     workload: WorkloadTrace,
     prefetchers: Dict[str, Callable[[WorkloadTrace], PrefetchStream]],
 ) -> Dict[str, PrefetchMetrics]:
-    """Run each prefetcher in the composite (next-line + X) configuration."""
-    results: Dict[str, PrefetchMetrics] = {}
-    for name, gen in prefetchers.items():
-        stream = gen(workload)
-        blocks = np.concatenate([workload.nl_blocks, stream.blocks])
-        pos = np.concatenate([workload.nl_pos, stream.pos])
-        issuer = np.concatenate(
-            [
-                np.zeros(len(workload.nl_blocks), np.int8),
-                np.ones(len(stream.blocks), np.int8),
-            ]
-        )
-        outcome = simulate_with_prefetch(
-            workload.profile,
-            blocks,
-            pos,
-            pf_issuer=issuer,
-            metadata_bytes=stream.metadata_bytes,
-        )
-        m = evaluate(
-            name,
-            workload.profile,
-            outcome,
-            baseline_outcome=workload.nl_outcome,
-            eval_from_pos=workload.eval_from_pos,
-            issuer=1,
-        )
-        m.info = stream.info  # attach prefetcher-side stats
-        results[name] = m
-    return results
+    """Deprecated shim: score each prefetcher against the baseline run.
+
+    Use :class:`repro.core.experiment.Experiment` instead — it owns workload
+    construction, caches traces across prefetchers, and returns a structured
+    result over the full evaluation grid.
+    """
+    warnings.warn(
+        "run_prefetcher_suite is deprecated; use repro.core.Experiment "
+        "(or repro.core.experiment.score_prefetcher for a single stream)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.core.experiment import score_prefetcher
+
+    return {
+        name: score_prefetcher(workload, name, gen)
+        for name, gen in prefetchers.items()
+    }

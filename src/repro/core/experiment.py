@@ -1,0 +1,281 @@
+"""Declarative experiment API: one call evaluates a (kernel x dataset x
+prefetcher) grid.
+
+This is the unified front door over the paper's evaluation methodology
+(§VI-§VII): declare *what* to evaluate —
+
+    result = Experiment(
+        kernels=["pgd", "bfs"],
+        datasets=["comdblp", "amazon"],
+        prefetchers=["amc", "vldp", "rnr"],
+    ).run()
+    result.metrics(kernel="pgd", dataset="comdblp", prefetcher="amc").speedup
+
+— and the builder owns the *how*: workload construction through
+:class:`~repro.core.driver.WorkloadSpec` (Algorithm-1 session wiring
+included), a :class:`WorkloadCache` so each trace is built once and reused
+across every prefetcher (and across experiments sharing the cache), registry
+resolution of prefetcher names, and composite (next-line + X) scoring of
+every grid cell.  The structured :class:`ExperimentResult` returns tidy
+per-cell rows ready for JSON dumps or figure assembly.
+
+Scoring one stream is :func:`score_prefetcher` — the single code path also
+used by the deprecated ``run_prefetcher_suite`` shim, so legacy results are
+bit-identical to ``Experiment`` results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.driver import WorkloadSpec, WorkloadTrace
+from repro.core.registry import Prefetcher, resolve_prefetchers
+from repro.memsim import (
+    SCALED,
+    HierarchyConfig,
+    PrefetchMetrics,
+    evaluate,
+    simulate_with_prefetch,
+)
+
+
+def score_prefetcher(
+    workload: WorkloadTrace, name: str, generate: Prefetcher
+) -> PrefetchMetrics:
+    """Score one prefetcher in the composite (next-line + X) configuration."""
+    stream = generate(workload)
+    blocks = np.concatenate([workload.nl_blocks, stream.blocks])
+    pos = np.concatenate([workload.nl_pos, stream.pos])
+    issuer = np.concatenate(
+        [
+            np.zeros(len(workload.nl_blocks), np.int8),
+            np.ones(len(stream.blocks), np.int8),
+        ]
+    )
+    outcome = simulate_with_prefetch(
+        workload.profile,
+        blocks,
+        pos,
+        pf_issuer=issuer,
+        metadata_bytes=stream.metadata_bytes,
+    )
+    m = evaluate(
+        name,
+        workload.profile,
+        outcome,
+        baseline_outcome=workload.nl_outcome,
+        eval_from_pos=workload.eval_from_pos,
+        issuer=1,
+    )
+    m.info = stream.info  # attach prefetcher-side stats
+    return m
+
+
+class WorkloadCache:
+    """Build-once cache of :class:`WorkloadTrace` keyed by ``WorkloadSpec``.
+
+    Each workload in an :class:`Experiment` is built once and scored by
+    every prefetcher; pass the same cache instance to several experiments
+    to reuse builds across them too.
+    """
+
+    def __init__(self):
+        self._store: Dict[WorkloadSpec, WorkloadTrace] = {}
+        self.builds = 0
+        self.hits = 0
+
+    def get_or_build(self, spec: WorkloadSpec) -> WorkloadTrace:
+        if spec not in self._store:
+            self.builds += 1
+            self._store[spec] = spec.build()
+        else:
+            self.hits += 1
+        return self._store[spec]
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellResult:
+    """One grid cell: a prefetcher scored on one workload."""
+
+    kernel: str
+    dataset: str
+    prefetcher: str
+    seed: int
+    metrics: PrefetchMetrics
+    spec: Optional[WorkloadSpec] = None  # full workload identity
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """Structured result over the full evaluation grid.
+
+    ``workloads`` is keyed by the full :class:`WorkloadSpec` (specs
+    differing only in hierarchy or element sizes stay distinct); filter
+    cells by ``spec=`` when kernel/dataset/seed alone are ambiguous.
+    """
+
+    cells: List[CellResult]
+    workloads: Dict[WorkloadSpec, WorkloadTrace]
+
+    def select(self, **filters) -> List[CellResult]:
+        """Cells matching all given kernel/dataset/prefetcher/seed filters."""
+        out = self.cells
+        for field, want in filters.items():
+            out = [c for c in out if getattr(c, field) == want]
+        return out
+
+    def metrics(self, **filters) -> PrefetchMetrics:
+        """The unique cell's metrics matching the filters (error otherwise)."""
+        hits = self.select(**filters)
+        if len(hits) != 1:
+            raise KeyError(
+                f"filters {filters} matched {len(hits)} cells, expected 1"
+            )
+        return hits[0].metrics
+
+    def suite(self, kernel: str, dataset: str, seed: int = 0) -> Dict[str, PrefetchMetrics]:
+        """Legacy-shaped ``{prefetcher: metrics}`` view of one workload cell."""
+        cells = self.select(kernel=kernel, dataset=dataset, seed=seed)
+        if not cells:
+            raise KeyError(
+                f"({kernel}, {dataset}, seed={seed}) matched no cells; "
+                f"workloads run: {sorted(set((c.kernel, c.dataset, c.seed) for c in self.cells))}"
+            )
+        out: Dict[str, PrefetchMetrics] = {}
+        for c in cells:
+            if c.prefetcher in out:
+                raise KeyError(
+                    f"({kernel}, {dataset}, seed={seed}) matched multiple "
+                    "workload specs; use select(spec=...) to disambiguate"
+                )
+            out[c.prefetcher] = c.metrics
+        return out
+
+    def rows(self) -> List[dict]:
+        """Tidy per-cell rows: grid coordinates + flattened metrics."""
+        return [
+            dict(
+                kernel=c.kernel,
+                dataset=c.dataset,
+                prefetcher=c.prefetcher,
+                seed=c.seed,
+                **c.metrics.row(),
+            )
+            for c in self.cells
+        ]
+
+    def workload(self, kernel: str, dataset: str, seed: int = 0) -> WorkloadTrace:
+        """The unique built trace for (kernel, dataset, seed); with several
+        specs sharing those coordinates, index ``workloads`` by spec."""
+        hits = [
+            w
+            for s, w in self.workloads.items()
+            if (s.kernel, s.dataset, s.seed) == (kernel, dataset, seed)
+        ]
+        if len(hits) != 1:
+            raise KeyError(
+                f"({kernel}, {dataset}, seed={seed}) matched {len(hits)} "
+                "workloads; index result.workloads by WorkloadSpec instead"
+            )
+        return hits[0]
+
+
+class Experiment:
+    """Declarative builder for a prefetcher-evaluation grid.
+
+    Either give ``kernels`` + ``datasets`` (the cross product is taken, once
+    per seed) or pass explicit ``workloads=[WorkloadSpec(...), ...]``.
+    ``prefetchers`` accepts registry names, :class:`PrefetcherSpec` objects,
+    ``(name, generator)`` pairs, or a mapping — see
+    :func:`repro.core.registry.resolve_prefetchers`.
+    """
+
+    def __init__(
+        self,
+        kernels: Optional[Sequence[str]] = None,
+        datasets: Optional[Sequence[str]] = None,
+        prefetchers: Iterable = ("amc",),
+        hierarchy: HierarchyConfig = SCALED,
+        seeds: Sequence[int] = (0,),
+        workloads: Optional[Sequence[WorkloadSpec]] = None,
+        cache: Optional[WorkloadCache] = None,
+    ):
+        if workloads is not None:
+            if kernels is not None or datasets is not None:
+                raise ValueError("pass either workloads= or kernels=+datasets=")
+            if hierarchy is not SCALED or tuple(seeds) != (0,):
+                raise ValueError(
+                    "hierarchy=/seeds= apply to the kernels=+datasets= grid; "
+                    "with workloads=, declare them on each WorkloadSpec"
+                )
+            self.workload_specs = list(workloads)
+        else:
+            if not kernels or not datasets:
+                raise ValueError("kernels= and datasets= must both be non-empty")
+            self.workload_specs = [
+                WorkloadSpec(kernel=k, dataset=d, hierarchy=hierarchy, seed=s)
+                for k in kernels
+                for d in datasets
+                for s in seeds
+            ]
+        # Fail fast on typo'd names at declaration time, not first build.
+        for spec in self.workload_specs:
+            spec.validate_names()
+        self.prefetchers: List[Tuple[str, Prefetcher]] = resolve_prefetchers(
+            prefetchers
+        )
+        self.cache = cache if cache is not None else WorkloadCache()
+
+    @property
+    def prefetcher_names(self) -> List[str]:
+        return [name for name, _ in self.prefetchers]
+
+    @property
+    def grid(self) -> List[Tuple[WorkloadSpec, str]]:
+        """The full (workload, prefetcher) evaluation grid, in run order."""
+        return [
+            (spec, name)
+            for spec in self.workload_specs
+            for name in self.prefetcher_names
+        ]
+
+    def run(self, verbose: bool = False) -> ExperimentResult:
+        """Build every workload (cached) and score every grid cell."""
+        cells: List[CellResult] = []
+        traces: Dict[WorkloadSpec, WorkloadTrace] = {}
+        for spec in self.workload_specs:
+            w = self.cache.get_or_build(spec)
+            traces[spec] = w
+            for name, gen in self.prefetchers:
+                m = score_prefetcher(w, name, gen)
+                cells.append(
+                    CellResult(
+                        kernel=spec.kernel,
+                        dataset=spec.dataset,
+                        prefetcher=name,
+                        seed=spec.seed,
+                        metrics=m,
+                        spec=spec,
+                    )
+                )
+                if verbose:
+                    print(
+                        f"[{spec.kernel}/{spec.dataset}] {name}: "
+                        f"speedup {m.speedup:.2f} coverage {m.coverage:.2f} "
+                        f"accuracy {m.accuracy:.2f}"
+                    )
+        return ExperimentResult(cells=cells, workloads=traces)
+
+
+__all__ = [
+    "CellResult",
+    "Experiment",
+    "ExperimentResult",
+    "WorkloadCache",
+    "score_prefetcher",
+]

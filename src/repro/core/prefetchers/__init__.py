@@ -1,30 +1,70 @@
 """Baseline prefetchers evaluated against AMC (paper Table I / §VII).
 
-All are L2 prefetchers trained on the L2 access stream (= L1 misses), as in
+All are L2 prefetchers trained per their declared ``trains_on`` stream —
+the spatial prefetchers (VLDP, Bingo) on the L2 access stream (= L1
+misses), the temporal ones (ISB, MISB, Domino) and RnR on L2 misses — as in
 the paper ("trained on L1 data cache access/miss and assigned as L2
-prefetcher"), except RnR which trains on L2 misses at L2. PC localization
-uses the accessing array id — exactly the paper's Table II model, where PCs
-A/B/C map to the V/N/P arrays.
+prefetcher"). PC localization uses the accessing array id — exactly the
+paper's Table II model, where PCs A/B/C map to the V/N/P arrays.
 
 Online learning is modeled *epoch-causally*: epoch k's predictions use
 tables trained on epochs < k (spatial prefetchers additionally warm up
 within-epoch). This slightly favors the baselines (instant table
 convergence), which is conservative for AMC's relative claims.
+
+Registry
+--------
+Every prefetcher self-registers at definition site via
+``@register_prefetcher(name, trains_on=..., ...)``
+(:mod:`repro.core.registry`), which carries its training stream, storage
+budget, family, and composite policy as a declarative
+:class:`~repro.core.registry.PrefetcherSpec`.  Resolve by name::
+
+    from repro.core.registry import get_prefetcher
+    gen = get_prefetcher("vldp").instantiate()          # baselines
+    gen = get_prefetcher("amc").instantiate(lookahead_accesses=30)  # configurable
+
+Deprecation policy
+------------------
+``SUITE`` (the bare name->callable dict) and
+``repro.core.run_prefetcher_suite`` are deprecated in favor of the registry
+and :class:`repro.core.Experiment`.  They remain as thin shims that emit
+``DeprecationWarning`` and delegate to the new code path (so results are
+identical), and will be removed once no in-repo caller or test depends on
+them — new code must not add SUITE entries; register instead.
 """
+import warnings
+
 from repro.core.prefetchers.simple import nextline_extra, droplet_model, ideal_l2
 from repro.core.prefetchers.temporal import isb, misb, domino
 from repro.core.prefetchers.spatial import vldp, bingo
 from repro.core.prefetchers.rnr import rnr
 
-SUITE = {
-    "vldp": vldp,
-    "bingo": bingo,
-    "isb": isb,
-    "misb": misb,
-    "rnr": rnr,
-    "domino": domino,
-    "prodigy": droplet_model,
-}
+# Registers "amc" (the modules above register the seven baselines + extras).
+import repro.core.amc.prefetcher  # noqa: F401
+
+# The seven Table I baselines, in the paper's presentation order.
+BASELINE_NAMES = ("vldp", "bingo", "isb", "misb", "rnr", "domino", "prodigy")
+
+
+def _suite():
+    from repro.core.registry import get_prefetcher
+
+    return {n: get_prefetcher(n).instantiate() for n in BASELINE_NAMES}
+
+
+def __getattr__(name):
+    if name == "SUITE":
+        warnings.warn(
+            "repro.core.prefetchers.SUITE is deprecated; resolve prefetchers "
+            "by name through repro.core.registry.get_prefetcher or pass names "
+            "to repro.core.Experiment",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return _suite()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "nextline_extra",
@@ -36,5 +76,6 @@ __all__ = [
     "vldp",
     "bingo",
     "rnr",
+    "BASELINE_NAMES",
     "SUITE",
 ]

@@ -19,8 +19,15 @@ from typing import Dict
 import numpy as np
 
 from repro.core.amc.prefetcher import PrefetchStream
+from repro.core.registry import register_prefetcher
 
 
+@register_prefetcher(
+    "rnr",
+    trains_on="l2_miss",
+    storage="off-chip recorded miss sequence (record once)",
+    family="replay",
+)
 def rnr(workload) -> PrefetchStream:
     views = workload.amc_iteration_views()
     lead = 2 * workload.profile.cfg.pf_fill_window

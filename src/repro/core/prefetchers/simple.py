@@ -4,8 +4,15 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.amc.prefetcher import PrefetchStream
+from repro.core.registry import register_prefetcher
 
 
+@register_prefetcher(
+    "nextline2",
+    trains_on="l2_access",
+    storage="none",
+    family="spatial",
+)
 def nextline_extra(workload) -> PrefetchStream:
     """A second next-line (degree 2 total with the baseline's)."""
     pos, blocks, _, _ = workload.l2_stream()
@@ -14,6 +21,12 @@ def nextline_extra(workload) -> PrefetchStream:
     return PrefetchStream("nextline2", blocks[keep] + 2, pos[keep])
 
 
+@register_prefetcher(
+    "prodigy",
+    trains_on="baseline_l2_miss",
+    storage="software data-flow graph",
+    family="dataflow",
+)
 def droplet_model(workload) -> PrefetchStream:
     """DROPLET/Prodigy dependency-prefetch model (paper §VII-A quantitative
     comparison, via the RnR paper's DROPLET model).
@@ -61,6 +74,12 @@ def droplet_model(workload) -> PrefetchStream:
     )
 
 
+@register_prefetcher(
+    "ideal",
+    trains_on="oracle",
+    storage="none",
+    family="bound",
+)
 def ideal_l2(workload) -> PrefetchStream:
     """IDEAL (infinite L2) bound: every baseline miss prefetched exactly one
     fill-window early — used as the Fig 8 'IDEAL' reference."""

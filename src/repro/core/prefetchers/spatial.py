@@ -11,6 +11,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.amc.prefetcher import PrefetchStream
+from repro.core.registry import register_prefetcher
 
 PAGE_BLOCKS = 64  # 4KB page / 64B line
 
@@ -111,6 +112,12 @@ def _pack3(a, b, c):
     return ((a + 64) * _B + (b + 64)) * _B + (c + 64)
 
 
+@register_prefetcher(
+    "vldp",
+    trains_on="l2_access",
+    storage="on-chip cascaded delta tables",
+    family="spatial",
+)
 def vldp(workload) -> PrefetchStream:
     """VLDP [51]: cascaded DPT1..3 + OPT, degree 4 (paper Table VIII).
 
@@ -188,6 +195,12 @@ def vldp(workload) -> PrefetchStream:
     return PrefetchStream("vldp", b, p, metadata_bytes=0)
 
 
+@register_prefetcher(
+    "bingo",
+    trains_on="l2_access",
+    storage="on-chip footprint history table",
+    family="spatial",
+)
 def bingo(workload) -> PrefetchStream:
     """Bingo [6]: per-region footprint replay, 2KB regions, degree<=32.
 

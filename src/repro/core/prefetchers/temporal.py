@@ -13,6 +13,7 @@ from typing import Dict, Tuple
 import numpy as np
 
 from repro.core.amc.prefetcher import PrefetchStream
+from repro.core.registry import register_prefetcher
 
 
 def _first_occurrence_index(stream: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -96,6 +97,12 @@ def _temporal_stream(workload, degree: int, localize_pc: bool, train_once: bool)
     return blocks_out, pos_out, n_train, n_lookups
 
 
+@register_prefetcher(
+    "isb",
+    trains_on="l2_miss",
+    storage="off-chip PS/SP maps, TLB-synced 64B transfers",
+    family="temporal",
+)
 def isb(workload) -> PrefetchStream:
     """ISB [23]: PC-localized structural temporal streams, degree 32.
 
@@ -109,6 +116,12 @@ def isb(workload) -> PrefetchStream:
     return PrefetchStream("isb", b, p, metadata_bytes=meta)
 
 
+@register_prefetcher(
+    "misb",
+    trains_on="l2_miss",
+    storage="off-chip 8B mappings + on-chip bloom filter",
+    family="temporal",
+)
 def misb(workload) -> PrefetchStream:
     """MISB [67]: same correlations, metadata managed with 8B mappings +
     bloom filter (most useless lookups filtered on-chip)."""
@@ -119,6 +132,12 @@ def misb(workload) -> PrefetchStream:
     return PrefetchStream("misb", b, p, metadata_bytes=meta)
 
 
+@register_prefetcher(
+    "domino",
+    trains_on="l2_miss",
+    storage="off-chip miss-pair history",
+    family="temporal",
+)
 def domino(workload) -> PrefetchStream:
     """Domino [5]: global miss-pair -> next-miss stream, degree 4."""
     pos, blocks, _, epochs = workload.l2_stream()

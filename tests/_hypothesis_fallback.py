@@ -1,0 +1,87 @@
+"""Deterministic mini-`hypothesis` used when the real library is absent.
+
+The tier-1 suite must run on a bare environment (numpy + jax + pytest
+only).  This module implements just the strategy surface the tests use —
+``integers``, ``floats``, ``sampled_from``, ``lists`` — drawing a fixed,
+seeded sequence of examples so the property tests still exercise their
+brute-force references instead of being skipped wholesale.  No shrinking,
+no example database; install ``hypothesis`` for the real thing.
+"""
+import functools
+import inspect
+import random
+
+# Keep the bare-environment runs fast: the real library's max_examples is
+# honored up to this cap (the properties are exact-equality checks against
+# brute-force references, so a seeded subset retains most of the power).
+_MAX_EXAMPLES_CAP = 15
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        opts = list(elements)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+st = _Strategies()
+
+
+class settings:
+    """Records max_examples for ``given`` to pick up; deadline is ignored."""
+
+    def __init__(self, max_examples=_MAX_EXAMPLES_CAP, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit above or below @given; check both objects.
+            max_examples = getattr(
+                wrapper,
+                "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", _MAX_EXAMPLES_CAP),
+            )
+            rng = random.Random(0xA3C)
+            for _ in range(min(max_examples, _MAX_EXAMPLES_CAP)):
+                drawn = [s.draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        wrapper.is_hypothesis_fallback = True
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (real hypothesis does the same).
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate

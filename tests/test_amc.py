@@ -13,7 +13,11 @@ from repro.core.amc.compression import (
 )
 from repro.core.amc.prefetcher import AMCConfig, AMCPrefetcher, IterationView
 from repro.core.amc.storage import AMCStorage
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: seeded stub strategies
+    from _hypothesis_fallback import given, settings, st
 
 
 def make_view(it, within, tpos, tvid, mpos, mblocks):
@@ -148,6 +152,32 @@ def test_amc_session_api():
     assert s.regs.prefetch_phase and s.iteration == 1
     s.end()
     assert not s.active
+
+
+def test_amc_session_rejects_non_divisible_elem_sizes():
+    """§V-C2 scales by target_elem_size // frontier_elem_size; a
+    non-divisible pair would silently truncate — must raise instead."""
+    s = AMCSession()
+    s.init()
+    s.addr_t_base(0x1000, 800, elem_size=6)
+    with pytest.raises(ValueError, match="integer multiple"):
+        s.addr_f_base(0x4000, 100, elem_size=4)
+    # the rejected call must not half-commit the frontier registers
+    assert s.regs.frontier_base is None and s.regs.frontier_elem_size == 1
+    # same check regardless of declaration order
+    s.init()
+    s.addr_f_base(0x4000, 100, elem_size=4)
+    with pytest.raises(ValueError, match="integer multiple"):
+        s.addr_t_base(0x1000, 800, elem_size=6)
+    # divisible sizes pass and compute the scaled address
+    s.init()
+    s.addr_f_base(0x4000, 100, elem_size=4)
+    s.addr_t_base(0x1000, 800, elem_size=8)
+    assert s.address_calculation(0x4004) == 0x1000 + 4 * 2
+    # elem_size=0 is rejected up front, not as ZeroDivisionError later
+    s.init()
+    with pytest.raises(ValueError, match=">= 1"):
+        s.addr_f_base(0x4000, 100, elem_size=0)
 
 
 @pytest.mark.slow

@@ -1,0 +1,217 @@
+"""The declarative Experiment API + prefetcher registry.
+
+Covers: registration/lookup/duplicate-name errors, grid construction,
+workload-cache reuse across prefetchers and experiments, and shim
+equivalence — the deprecated ``run_prefetcher_suite`` path must produce the
+same PrefetchMetrics as ``Experiment`` for the same workload cell.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Experiment,
+    WorkloadCache,
+    WorkloadSpec,
+    get_prefetcher,
+    list_prefetchers,
+    register_prefetcher,
+    run_prefetcher_suite,
+)
+from repro.core.registry import (
+    DuplicatePrefetcherError,
+    UnknownPrefetcherError,
+    resolve_prefetchers,
+)
+
+PAPER_PREFETCHERS = ["amc", "vldp", "bingo", "isb", "misb", "rnr", "domino", "prodigy"]
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return WorkloadCache()
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_all_paper_prefetchers_resolvable_by_name():
+    names = set(list_prefetchers())
+    assert set(PAPER_PREFETCHERS) <= names
+    for n in PAPER_PREFETCHERS:
+        spec = get_prefetcher(n)
+        assert spec.name == n
+        assert spec.trains_on  # declarative metadata present
+        assert callable(spec.instantiate())
+
+
+def test_registry_duplicate_name_rejected():
+    with pytest.raises(DuplicatePrefetcherError, match="already registered"):
+
+        @register_prefetcher("vldp", trains_on="l2_access")
+        def other(workload):
+            raise NotImplementedError
+
+
+def test_registry_unknown_name_lists_available():
+    with pytest.raises(UnknownPrefetcherError, match="vldp"):
+        get_prefetcher("does-not-exist")
+
+
+def test_non_configurable_prefetcher_rejects_overrides():
+    with pytest.raises(TypeError, match="not configurable"):
+        get_prefetcher("vldp").instantiate(degree=4)
+
+
+def test_amc_factory_applies_config_overrides():
+    gen = get_prefetcher("amc").instantiate(lookahead_accesses=30, match_pairs=True)
+    cfg = gen.__self__.config
+    assert cfg.lookahead_accesses == 30 and cfg.match_pairs
+
+
+def test_resolve_prefetchers_mixed_references():
+    def custom(workload):
+        raise NotImplementedError
+
+    pairs = resolve_prefetchers(["rnr", get_prefetcher("vldp"), ("mine", custom)])
+    assert [n for n, _ in pairs] == ["rnr", "vldp", "mine"]
+    with pytest.raises(ValueError, match="duplicate"):
+        resolve_prefetchers(["rnr", "rnr"])
+
+
+def test_suite_shim_matches_registry():
+    with pytest.deprecated_call():
+        from repro.core.prefetchers import SUITE
+    assert list(SUITE) == ["vldp", "bingo", "isb", "misb", "rnr", "domino", "prodigy"]
+    assert SUITE["vldp"] is get_prefetcher("vldp").instantiate()
+
+
+# ------------------------------------------------------------ WorkloadSpec
+
+
+def test_workload_spec_validates_declaratively():
+    # elem-size divisibility is checked at declaration time
+    with pytest.raises(ValueError, match="integer multiple"):
+        WorkloadSpec("pgd", "comdblp", target_elem_size=6, frontier_elem_size=4)
+    # name membership is checked before the app would run from names
+    # (an ad-hoc name + caller-supplied runs= stays possible)
+    with pytest.raises(ValueError, match="unknown kernel"):
+        WorkloadSpec("nope", "comdblp").build()
+    with pytest.raises(ValueError, match="unknown dataset"):
+        WorkloadSpec("pgd", "nope").build()
+    # the frozen spec itself is the cache/identity key
+    spec = WorkloadSpec("pgd", "comdblp")
+    assert hash(spec) == hash(WorkloadSpec("pgd", "comdblp"))
+
+
+def test_experiment_fails_fast_on_unknown_names():
+    with pytest.raises(ValueError, match="unknown dataset"):
+        Experiment(kernels=["pgd"], datasets=["comdlbp"], prefetchers=["rnr"])
+    with pytest.raises(ValueError, match="unknown kernel"):
+        Experiment(kernels=["nope"], datasets=["comdblp"], prefetchers=["rnr"])
+
+
+# ------------------------------------------------------------- Experiment
+
+
+def test_experiment_grid_construction():
+    exp = Experiment(
+        kernels=["pgd", "cc"], datasets=["comdblp"], prefetchers=["vldp", "rnr"]
+    )
+    assert len(exp.workload_specs) == 2
+    assert exp.prefetcher_names == ["vldp", "rnr"]
+    grid = exp.grid
+    assert len(grid) == 4
+    assert {(s.kernel, n) for s, n in grid} == {
+        ("pgd", "vldp"), ("pgd", "rnr"), ("cc", "vldp"), ("cc", "rnr"),
+    }
+    with pytest.raises(ValueError, match="non-empty"):
+        Experiment(kernels=["pgd"], datasets=[], prefetchers=["rnr"])
+    with pytest.raises(ValueError, match="either workloads"):
+        Experiment(
+            kernels=["pgd"], datasets=["comdblp"],
+            workloads=[WorkloadSpec("pgd", "comdblp")],
+        )
+    # seeds=/hierarchy= would be silently dropped with workloads= — reject
+    with pytest.raises(ValueError, match="declare them on each WorkloadSpec"):
+        Experiment(
+            workloads=[WorkloadSpec("pgd", "comdblp")],
+            prefetchers=["rnr"], seeds=(0, 1),
+        )
+
+
+def test_experiment_accepts_bare_prefetcher_name():
+    exp = Experiment(kernels=["pgd"], datasets=["comdblp"], prefetchers="rnr")
+    assert exp.prefetcher_names == ["rnr"]
+
+
+def test_workload_cache_reused_across_prefetchers_and_experiments(cache):
+    exp1 = Experiment(
+        kernels=["pgd"], datasets=["comdblp"],
+        prefetchers=["rnr", "nextline2"], cache=cache,
+    )
+    res1 = exp1.run()
+    assert cache.builds == 1 and len(res1.cells) == 2  # one build, two scores
+    exp2 = Experiment(
+        kernels=["pgd"], datasets=["comdblp"], prefetchers=["ideal"], cache=cache
+    )
+    res2 = exp2.run()
+    assert cache.builds == 1 and cache.hits == 1  # second experiment reuses
+    # identity, not just equality: the same trace object is handed out
+    assert res2.workload("pgd", "comdblp") is res1.workload("pgd", "comdblp")
+
+
+def test_specs_differing_beyond_coordinates_stay_distinct(cache):
+    """Two specs with the same (kernel, dataset, seed) but different
+    programming-model parameters must not collide in the result."""
+    s8 = WorkloadSpec("pgd", "comdblp")
+    s16 = WorkloadSpec("pgd", "comdblp", target_elem_size=16)
+    res = Experiment(workloads=[s8, s16], prefetchers=["rnr"], cache=cache).run()
+    assert len(res.workloads) == 2
+    assert res.workloads[s8].session.regs.target_elem_size == 8
+    assert res.workloads[s16].session.regs.target_elem_size == 16
+    with pytest.raises(KeyError, match="matched 2"):
+        res.workload("pgd", "comdblp")
+    # spec= disambiguates cell filters
+    assert res.metrics(spec=s16, prefetcher="rnr") is not None
+
+
+def test_experiment_result_is_tidy(cache):
+    res = Experiment(
+        kernels=["pgd"], datasets=["comdblp"], prefetchers=["rnr"], cache=cache
+    ).run()
+    rows = res.rows()
+    assert len(rows) == 1
+    row = rows[0]
+    for key in ("kernel", "dataset", "prefetcher", "seed", "speedup", "coverage"):
+        assert key in row
+    assert row["prefetcher"] == "rnr"
+    assert res.metrics(prefetcher="rnr").speedup == row["speedup"]
+    with pytest.raises(KeyError, match="matched 0"):
+        res.metrics(prefetcher="vldp")
+
+
+def test_experiment_matches_legacy_suite_path():
+    """Acceptance: the declarative grid reproduces the legacy
+    build_workload + run_prefetcher_suite metrics exactly."""
+    from repro.core.amc import AMCConfig, AMCPrefetcher
+
+    result = Experiment(
+        kernels=["bfs"], datasets=["comdblp"], prefetchers=["amc", "vldp"]
+    ).run()
+    w = result.workload("bfs", "comdblp")
+    with pytest.deprecated_call():
+        legacy = run_prefetcher_suite(
+            w,
+            {
+                "amc": AMCPrefetcher(AMCConfig()).generate,
+                "vldp": get_prefetcher("vldp").instantiate(),
+            },
+        )
+    for name in ("amc", "vldp"):
+        new = result.metrics(prefetcher=name).row()
+        old = legacy[name].row()
+        new_info, old_info = new.pop("info"), old.pop("info")
+        assert new == old, name
+        assert set(new_info) == set(old_info), name
+        for k in new_info:
+            np.testing.assert_array_equal(new_info[k], old_info[k], err_msg=f"{name}.{k}")

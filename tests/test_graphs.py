@@ -1,7 +1,11 @@
 """Graph substrate tests: CSR invariants, generators, dynamics, partition."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: seeded stub strategies
+    from _hypothesis_fallback import given, settings, st
 
 from repro.graphs import (
     CSRGraph,

@@ -2,7 +2,11 @@
 brute-force Python references (hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: seeded stub strategies
+    from _hypothesis_fallback import given, settings, st
 
 from repro.memsim import (
     SCALED,
