@@ -10,9 +10,11 @@ run before committing silicon parameters:
   - match_pairs          (strict (prev,cur) CAM match vs trigger-only)
 
 All variants run in one declarative ``Experiment`` against a single cached
-workload build.
+workload build; the build persists in the workload artifact cache, so
+re-running after the sweep (or a previous ablation) skips it entirely, and
+``--workers N`` shards the variants across a process pool.
 
-    PYTHONPATH=src python -m benchmarks.ablations [--dataset comdblp]
+    PYTHONPATH=src python -m benchmarks.ablations [--dataset comdblp] [--workers 4]
 """
 from __future__ import annotations
 
@@ -26,9 +28,19 @@ def main():
     ap.add_argument("--kernel", default="pgd")
     ap.add_argument("--dataset", default="comdblp")
     ap.add_argument("--out", default="results/ablations.json")
+    ap.add_argument(
+        "--workers", type=int, default=1,
+        help="process-parallel scoring of the AMC variants (1 = serial)",
+    )
+    ap.add_argument(
+        "--cache-dir", default=None,
+        help="workload artifact cache root (default: $REPRO_WORKLOAD_CACHE "
+        "or ~/.cache/repro-amc/workloads)",
+    )
     args = ap.parse_args()
 
-    from repro.core import Experiment, WorkloadSpec, get_prefetcher
+    from repro.core import Experiment, WorkloadCache, WorkloadSpec, get_prefetcher
+    from repro.core.exec.artifacts import ArtifactCache
 
     base = dict(
         max_misses_per_entry=20,
@@ -53,7 +65,10 @@ def main():
     result = Experiment(
         workloads=[WorkloadSpec(args.kernel, args.dataset)],
         prefetchers=[(name, gen) for _, _, name, gen in variants],
-    ).run(verbose=True)  # incremental progress; detailed rows printed below
+        cache=WorkloadCache(artifacts=ArtifactCache(args.cache_dir)),
+    ).run(  # incremental progress; detailed rows printed below
+        verbose=True, workers=args.workers if args.workers > 1 else None
+    )
     w = result.workload(args.kernel, args.dataset)
 
     rows = []

@@ -10,15 +10,13 @@ from __future__ import annotations
 import sys
 import time
 
+sys.path.insert(0, "src")
+
 import numpy as np
 
-
-def _time_us(fn, repeats=3):
-    fn()  # warm / compile
-    t0 = time.time()
-    for _ in range(repeats):
-        fn()
-    return (time.time() - t0) / repeats * 1e6
+# perf_counter-based timing shared with benchmarks/bench.py — time.time()
+# has coarse, non-monotonic ticks that make microsecond numbers meaningless.
+from repro.core.exec.timers import time_us as _time_us
 
 
 def kernel_bench():
@@ -71,7 +69,6 @@ def kernel_bench():
 
 
 def main() -> None:
-    sys.path.insert(0, "src")
     from benchmarks import figures
 
     data = figures.load()
@@ -90,9 +87,9 @@ def main() -> None:
             ("fig16_miss_size", figures.fig16_miss_size),
             ("compression_ratio", figures.compression_stats),
         ]:
-            t0 = time.time()
+            t0 = time.perf_counter()
             headers, rows, derived = fn(data)
-            us = (time.time() - t0) * 1e6
+            us = (time.perf_counter() - t0) * 1e6
             key_items = ";".join(f"{k}={v:.3f}" for k, v in list(derived.items())[:6])
             print(f"{name},{us:.0f},{key_items}")
         figures.table8_storage()

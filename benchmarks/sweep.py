@@ -1,21 +1,27 @@
 """Full prefetcher sweep: every (kernel, dataset) x every prefetcher.
 
-Each workload cell is one declarative ``Experiment`` over the registry-named
-prefetcher list; the workload trace is built once and shared by all of them.
-Produces one JSON per workload under ``results/`` (resumable — existing
-files are skipped). All paper figures (Figs 8-16) are assembled from these
-JSONs by the per-figure benchmark modules.
+All remaining workloads run as ONE declarative ``Experiment`` on the
+execution engine: ``--workers N`` shards workloads across a process pool
+(each worker builds or cache-loads its trace once and scores every
+prefetcher against it), and built traces persist in the content-addressed
+workload artifact cache so repeat sweeps, ablations and CI reruns skip the
+rebuild cost entirely.
+
+Output JSONs are deterministic and timing-free: a ``--workers 4`` sweep
+produces byte-identical files to a serial one.  One JSON per workload under
+``results/`` (resumable — existing files are skipped).  All paper figures
+(Figs 8-16) are assembled from these JSONs by the per-figure benchmark
+modules; wall-clock measurements live in ``benchmarks/bench.py`` instead.
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.sweep [--kernels pgd,cc] [--datasets amazon]
+    PYTHONPATH=src python -m benchmarks.sweep [--kernels pgd,cc]
+        [--datasets amazon] [--workers 4] [--cache-dir DIR]
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
-import time
 
 import numpy as np
 
@@ -55,43 +61,22 @@ def miss_size_histogram(workload) -> dict:
     }
 
 
-def run_workload(kernel: str, dataset: str, out_dir: str, prefetchers=None):
-    from repro.core import Experiment
-
-    os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, f"{kernel}_{dataset}.json")
-    if os.path.exists(path):
-        print(f"[skip] {path}")
-        return
-
-    t0 = time.time()
-    names = list(prefetchers or PREFETCHERS)
-    result = Experiment(
-        kernels=[kernel], datasets=[dataset], prefetchers=names
-    ).run()
-    res = result.suite(kernel, dataset)
-    w = result.workload(kernel, dataset)
+def workload_payload(w, result, spec, names) -> dict:
+    """The per-workload JSON document (deterministic: no timing fields)."""
     base = w.profile.baseline_counts(w.eval_from_pos)
-    out = {
-        "kernel": kernel,
-        "dataset": dataset,
+    return {
+        "kernel": spec.kernel,
+        "dataset": spec.dataset,
         "accesses": int(w.num_accesses),
         "eval_from_pos": int(w.eval_from_pos),
         "input_bytes": int(w.input_bytes),
         "baseline": base,
-        "elapsed_s": time.time() - t0,
         "miss_size": miss_size_histogram(w),
-        "prefetchers": {n: _to_jsonable(m.row()) for n, m in res.items()},
-    }
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
-    print(
-        f"[done] {kernel}/{dataset} in {out['elapsed_s']:.0f}s  "
-        + "  ".join(
-            f"{n}:s={res[n].speedup:.2f},c={res[n].coverage:.2f},a={res[n].accuracy:.2f}"
+        "prefetchers": {
+            n: _to_jsonable(result.metrics(spec=spec, prefetcher=n).row())
             for n in names
-        )
-    )
+        },
+    }
 
 
 def _to_jsonable(obj):
@@ -114,14 +99,67 @@ def main():
     ap.add_argument("--datasets", default="")
     ap.add_argument("--prefetchers", default=",".join(PREFETCHERS))
     ap.add_argument("--out", default="results")
+    ap.add_argument(
+        "--workers", type=int, default=1,
+        help="process-parallel workload cells (1 = serial reference path)",
+    )
+    ap.add_argument(
+        "--cache-dir", default=None,
+        help="workload artifact cache root (default: $REPRO_WORKLOAD_CACHE "
+        "or ~/.cache/repro-amc/workloads)",
+    )
     args = ap.parse_args()
-    kernels = args.kernels.split(",")
-    pfs = args.prefetchers.split(",")
-    for k in kernels:
+
+    from repro.core import Experiment, WorkloadCache, WorkloadSpec
+    from repro.core.exec.artifacts import ArtifactCache
+
+    names = args.prefetchers.split(",")
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    for k in args.kernels.split(","):
         for d in MATRIX[k]:
             if args.datasets and d not in args.datasets.split(","):
                 continue
-            run_workload(k, d, args.out, pfs)
+            path = os.path.join(args.out, f"{k}_{d}.json")
+            if os.path.exists(path):
+                print(f"[skip] {path}")
+                continue
+            todo.append((WorkloadSpec(kernel=k, dataset=d), path))
+    if not todo:
+        return
+
+    cache = WorkloadCache(artifacts=ArtifactCache(args.cache_dir))
+    grid_result = None
+    if args.workers > 1:
+        # One grid run shards all workloads across the pool; traces stay
+        # in the artifact store and are re-loaded one at a time below.
+        grid_result = Experiment(
+            workloads=[spec for spec, _ in todo], prefetchers=names, cache=cache
+        ).run(workers=args.workers)
+
+    for spec, path in todo:
+        if grid_result is not None:
+            result = grid_result
+        else:
+            # Serial: one experiment per workload, written as it finishes,
+            # so an interrupted sweep keeps every completed JSON.
+            result = Experiment(
+                workloads=[spec], prefetchers=names, cache=cache
+            ).run()
+        w = cache.get_or_build(spec)
+        out = workload_payload(w, result, spec, names)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        # Peak memory stays at ~one trace regardless of sweep size.
+        cache.evict(spec)
+        del w, result
+        scores = "  ".join(
+            f"{n}:s={out['prefetchers'][n]['speedup']:.2f}"
+            f",c={out['prefetchers'][n]['coverage']:.2f}"
+            f",a={out['prefetchers'][n]['accuracy']:.2f}"
+            for n in names
+        )
+        print(f"[done] {spec.kernel}/{spec.dataset}  {scores}")
 
 
 if __name__ == "__main__":

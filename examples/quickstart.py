@@ -6,20 +6,26 @@ paper's headline metrics. Workload construction — including the AMC
 programming interface exactly as Algorithm 1 uses it — is owned by the
 declarative `WorkloadSpec` inside the experiment.
 
-    PYTHONPATH=src python examples/quickstart.py
+`--workers N` runs the same cells on the parallel execution engine (same
+results, bit-identical); either way the built trace persists in the
+workload artifact cache, so the second invocation skips the build.
+
+    PYTHONPATH=src python examples/quickstart.py [--workers 2]
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import Experiment
+from repro.core import ArtifactCache, Experiment, WorkloadCache
 
 
-def main():
+def main(workers: int = 1):
     # comdblp is the smallest Table VII dataset — fast on CPU.
     result = Experiment(
-        kernels=["pgd"], datasets=["comdblp"], prefetchers=["amc", "vldp"]
-    ).run()
+        kernels=["pgd"], datasets=["comdblp"], prefetchers=["amc", "vldp"],
+        cache=WorkloadCache(artifacts=ArtifactCache()),
+    ).run(workers=workers if workers > 1 else None)
     w = result.workload("pgd", "comdblp")
     print(
         f"workload: PGD on {w.dataset} "
@@ -47,4 +53,6 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=1)
+    main(workers=ap.parse_args().workers)

@@ -18,6 +18,9 @@ Subpackages:
   driver       -- the composite-run workload driver tying apps, traces,
                   memsim and prefetchers together
   experiment   -- the Experiment builder and per-stream scoring
+  exec         -- parallel execution engine: process-pool grid scheduler,
+                  content-addressed workload artifact cache, stage timers
+                  (``Experiment(...).run(workers=N)`` opts in)
 
 Deprecated (thin shims, see ``prefetchers/__init__.py`` for the policy):
 ``run_prefetcher_suite`` and ``repro.core.prefetchers.SUITE``.
@@ -28,6 +31,7 @@ from repro.core.driver import (
     build_workload,
     run_prefetcher_suite,
 )
+from repro.core.exec.artifacts import ArtifactCache
 from repro.core.experiment import (
     CellResult,
     Experiment,
@@ -44,6 +48,7 @@ from repro.core.registry import (
 )
 
 __all__ = [
+    "ArtifactCache",
     "WorkloadSpec",
     "WorkloadTrace",
     "build_workload",

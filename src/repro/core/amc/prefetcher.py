@@ -27,7 +27,7 @@ coverage loss.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 

@@ -24,9 +24,10 @@ import numpy as np
 
 from repro.apps import KERNELS, trace_app_run
 from repro.apps.ligra import AppRun
-from repro.apps.trace import F_ID, T_ID, TraceConfig, concat_traces
+from repro.apps.trace import T_ID, TraceConfig, concat_traces
 from repro.core.amc.api import AMCSession
 from repro.core.amc.prefetcher import IterationView, PrefetchStream
+from repro.core.exec.timers import stage
 from repro.graphs import DATASETS, make_dataset, make_evolving_pair
 from repro.memsim import (
     SCALED,
@@ -41,6 +42,14 @@ from repro.memsim.hierarchy import PrefetchOutcome
 
 # Kernels evaluated on the two-run evolving protocol (§VI).
 TWO_RUN_KERNELS = ("bfs", "bellmanford")
+
+# Version of the trace-construction pipeline below (app protocol, address
+# layout, demand/next-line simulation).  The workload artifact cache
+# (repro.core.exec.artifacts) folds this into its content hash, so bump it
+# whenever a change to this module (or to apps/graphs/memsim code it calls)
+# alters the built WorkloadTrace — every persisted artifact then reads as a
+# miss and is rebuilt instead of silently serving stale data.
+TRACE_CODE_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,42 +246,57 @@ def build_workload(
     return spec.build(runs=runs)
 
 
+def make_session(spec: WorkloadSpec, cfg_trace: TraceConfig) -> AMCSession:
+    """Programming-model session, configured exactly as Algorithm 1 does —
+    element sizes come from the declarative spec (Table V wiring).  Also
+    used by the workload artifact cache to reconstruct loaded traces."""
+    sess = AMCSession()
+    sess.init(asid=0)
+    t_base, t_size = cfg_trace.target_range
+    f_base, f_size = cfg_trace.frontier_range
+    sess.addr_t_base(t_base, t_size, elem_size=spec.target_elem_size)
+    sess.addr_f_base(f_base, f_size, elem_size=spec.frontier_elem_size)
+    return sess
+
+
 def _build_workload(spec: WorkloadSpec, runs: Optional[List[AppRun]]) -> WorkloadTrace:
     kernel, dataset, hierarchy = spec.kernel, spec.dataset, spec.hierarchy
-    runs = runs if runs is not None else _run_app(kernel, dataset, spec.seed)
-    # Shared address layout across runs (same id space - evolve.py keeps it).
-    g = runs[0].graph
-    cfg_trace = TraceConfig(
-        num_vertices=g.num_vertices,
-        num_edges=max(r.graph.num_edges for r in runs),
-    )
+    with stage("trace_gen"):
+        runs = runs if runs is not None else _run_app(kernel, dataset, spec.seed)
+        # Shared address layout across runs (same id space - evolve.py keeps it).
+        g = runs[0].graph
+        cfg_trace = TraceConfig(
+            num_vertices=g.num_vertices,
+            num_edges=max(r.graph.num_edges for r in runs),
+        )
 
-    all_traces = []
-    iter_epochs: List[Tuple[int, int]] = []
-    git = 0
-    run_start_iter = []
-    for run_idx, run in enumerate(runs):
-        traces = trace_app_run(run, cfg_trace)
-        run_start_iter.append(git)
-        for k, t in enumerate(traces):
-            t.iteration = git  # globalize
-            if kernel in TWO_RUN_KERNELS:
-                iter_epochs.append((run_idx, k))
-            else:
-                iter_epochs.append((git, 0))
-            git += 1
-        all_traces.extend(traces)
+        all_traces = []
+        iter_epochs: List[Tuple[int, int]] = []
+        git = 0
+        run_start_iter = []
+        for run_idx, run in enumerate(runs):
+            traces = trace_app_run(run, cfg_trace)
+            run_start_iter.append(git)
+            for k, t in enumerate(traces):
+                t.iteration = git  # globalize
+                if kernel in TWO_RUN_KERNELS:
+                    iter_epochs.append((run_idx, k))
+                else:
+                    iter_epochs.append((git, 0))
+                git += 1
+            all_traces.extend(traces)
 
-    block, array_id, iter_id, elem = concat_traces(all_traces)
-    epoch_id = np.asarray([iter_epochs[i][0] for i in range(git)], dtype=np.int32)[
-        iter_id
-    ]
+        block, array_id, iter_id, elem = concat_traces(all_traces)
+        epoch_id = np.asarray(
+            [iter_epochs[i][0] for i in range(git)], dtype=np.int32
+        )[iter_id]
 
-    profile = simulate_demand(block, iter_id, hierarchy)
-    nl_blocks, nl_pos = _nextline_stream(profile)
-    nl_outcome = simulate_with_prefetch(
-        profile, nl_blocks, nl_pos, pf_issuer=np.zeros(len(nl_blocks), np.int8)
-    )
+    with stage("demand_sim"):
+        profile = simulate_demand(block, iter_id, hierarchy)
+        nl_blocks, nl_pos = _nextline_stream(profile)
+        nl_outcome = simulate_with_prefetch(
+            profile, nl_blocks, nl_pos, pf_issuer=np.zeros(len(nl_blocks), np.int8)
+        )
 
     eval_from = 0
     if kernel in TWO_RUN_KERNELS and len(runs) > 1:
@@ -280,14 +304,7 @@ def _build_workload(spec: WorkloadSpec, runs: Optional[List[AppRun]]) -> Workloa
         second_first_iter = run_start_iter[1]
         eval_from = int(np.searchsorted(iter_id, second_first_iter))
 
-    # Programming-model session, configured exactly as Algorithm 1 does —
-    # element sizes come from the declarative spec (Table V wiring).
-    sess = AMCSession()
-    sess.init(asid=0)
-    t_base, t_size = cfg_trace.target_range
-    f_base, f_size = cfg_trace.frontier_range
-    sess.addr_t_base(t_base, t_size, elem_size=spec.target_elem_size)
-    sess.addr_f_base(f_base, f_size, elem_size=spec.frontier_elem_size)
+    sess = make_session(spec, cfg_trace)
 
     return WorkloadTrace(
         spec=spec,

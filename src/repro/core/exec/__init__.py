@@ -1,0 +1,45 @@
+"""Parallel, cache-backed experiment execution engine.
+
+Three pieces, layered under :class:`repro.core.Experiment`:
+
+- :mod:`~repro.core.exec.timers` — ``perf_counter`` timing helpers and the
+  zero-overhead pipeline stage instrumentation.
+- :mod:`~repro.core.exec.artifacts` — content-addressed on-disk cache of
+  built workload traces (compressed ``.npz`` keyed by spec + trace-code
+  version), so repeat sweeps and CI reruns skip the dominant rebuild cost.
+- :mod:`~repro.core.exec.scheduler` — process-pool grid scheduler that
+  shards evaluation cells by workload, builds each trace once per grid,
+  and reassembles results in deterministic (bit-identical-to-serial) order.
+
+``Experiment(...).run()`` stays the serial reference path;
+``Experiment(...).run(workers=N)`` opts into the engine.
+
+Only :mod:`timers` is imported eagerly — the workload driver uses its stage
+hooks, so the heavier modules (which import the driver back) resolve lazily
+through ``__getattr__`` to keep the import graph acyclic.
+"""
+
+from repro.core.exec.timers import collect_stages, stage, time_s, time_us
+
+__all__ = [
+    "ArtifactCache",
+    "collect_stages",
+    "default_cache_dir",
+    "rows_equal",
+    "run_grid",
+    "stage",
+    "time_s",
+    "time_us",
+]
+
+
+def __getattr__(name):
+    if name in ("ArtifactCache", "default_cache_dir"):
+        from repro.core.exec import artifacts
+
+        return getattr(artifacts, name)
+    if name in ("run_grid", "rows_equal"):
+        from repro.core.exec import scheduler
+
+        return getattr(scheduler, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,232 @@
+"""Content-addressed on-disk cache of built workload traces.
+
+Building a :class:`~repro.core.driver.WorkloadTrace` (app run -> access
+trace -> demand simulation -> next-line baseline outcome) dominates the
+cost of an evaluation grid and is fully determined by the
+:class:`~repro.core.driver.WorkloadSpec`.  This cache persists every built
+component as one compressed ``.npz`` so repeat sweeps, ablations and CI
+reruns skip the rebuild entirely, and so parallel workers can share one
+build per workload.
+
+Properties:
+
+- **Content-addressed.**  The filename embeds a SHA-256 digest of the
+  canonical spec JSON plus :data:`repro.core.driver.TRACE_CODE_VERSION`
+  and the artifact schema version.  Changing any spec field, bumping the
+  trace-code version, or changing the artifact layout all move the key —
+  stale artifacts are never read, merely orphaned.
+- **Bit-identical round trip.**  Arrays are stored losslessly; derived
+  pieces (the L2 substream views, the AMC session) are reconstructed by
+  the same code paths the builder uses, so metrics computed from a loaded
+  trace equal those from a fresh build exactly (asserted in
+  ``tests/test_exec.py``).
+- **Concurrency-safe.**  Writes go to a temp file in the cache directory
+  followed by an atomic ``os.replace``; unreadable or truncated artifacts
+  read as cache misses and are rebuilt.
+
+Location: ``$REPRO_WORKLOAD_CACHE`` if set, else
+``~/.cache/repro-amc/workloads``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import zipfile
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+import repro.core.driver as _driver
+from repro.apps.trace import TraceConfig
+from repro.core.driver import WorkloadSpec, WorkloadTrace, make_session
+from repro.memsim.hierarchy import DemandProfile, PrefetchOutcome
+
+ENV_VAR = "REPRO_WORKLOAD_CACHE"
+
+# Layout version of the .npz payload itself (folded into the content hash
+# alongside TRACE_CODE_VERSION, and double-checked on load).
+ARTIFACT_SCHEMA = 1
+
+# PrefetchOutcome array fields, stored under an ``o_`` prefix.
+_OUTCOME_ARRAYS = (
+    "pf_pos",
+    "pf_issuer",
+    "pf_redundant",
+    "pf_no_future",
+    "pf_llc_in_dram",
+    "pf_llc_in_pos",
+    "demand_l2_hit",
+    "demand_useful",
+    "demand_late",
+    "demand_fill_issuer",
+    "demand_llc_hit",
+    "pf_early",
+)
+
+
+def default_cache_dir() -> Path:
+    """Artifact root: ``$REPRO_WORKLOAD_CACHE`` or the user cache dir."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro-amc" / "workloads"
+
+
+class ArtifactCache:
+    """Persist/load :class:`WorkloadTrace` artifacts under one root dir."""
+
+    def __init__(self, root: Optional[os.PathLike] = None):
+        self.root = Path(root) if root is not None else default_cache_dir()
+        self.loads = 0
+        self.saves = 0
+        self.misses = 0
+
+    def key(self, spec: WorkloadSpec) -> str:
+        """Canonical identity document hashed into the artifact filename."""
+        doc = {
+            "artifact_schema": ARTIFACT_SCHEMA,
+            "trace_code_version": _driver.TRACE_CODE_VERSION,
+            "spec": dataclasses.asdict(spec),
+        }
+        return json.dumps(doc, sort_keys=True)
+
+    def path_for(self, spec: WorkloadSpec) -> Path:
+        digest = hashlib.sha256(self.key(spec).encode()).hexdigest()[:20]
+        name = f"{spec.kernel}_{spec.dataset}_s{spec.seed}_{digest}.npz"
+        return self.root / name
+
+    def has(self, spec: WorkloadSpec) -> bool:
+        """Cheap presence + integrity probe (no array decompression).
+
+        Reads only the zip central directory, which lives at the end of
+        the file — so the common corruption (a truncated write from a
+        killed process) reads as absent.  Callers that plan work from
+        ``has()`` (the grid scheduler splits only materialized workloads)
+        therefore won't fan a doomed load out to several workers.
+        """
+        try:
+            with zipfile.ZipFile(self.path_for(spec)) as z:
+                return "meta.npy" in z.namelist()  # np.savez appends .npy
+        except (OSError, zipfile.BadZipFile):
+            return False
+
+    def load(self, spec: WorkloadSpec) -> Optional[WorkloadTrace]:
+        """The cached trace for ``spec``, or None (unreadable == miss)."""
+        path = self.path_for(spec)
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                trace = _unpack(spec, z)
+        except Exception:
+            self.misses += 1
+            return None
+        self.loads += 1
+        return trace
+
+    def save(self, spec: WorkloadSpec, trace: WorkloadTrace) -> Path:
+        """Persist ``trace`` atomically; returns the artifact path."""
+        path = self.path_for(spec)
+        self.root.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez_compressed(f, **_pack(trace))
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self.saves += 1
+        return path
+
+
+def _pack(trace: WorkloadTrace) -> dict:
+    o = trace.nl_outcome
+    meta = {
+        "schema": ARTIFACT_SCHEMA,
+        "kernel": trace.kernel,
+        "dataset": trace.dataset,
+        "num_vertices": trace.cfg_trace.num_vertices,
+        "num_edges": trace.cfg_trace.num_edges,
+        "base": trace.cfg_trace.base,
+        "eval_from_pos": trace.eval_from_pos,
+        "nl_evicted_early_total": o.evicted_early_total,
+        "nl_metadata_bytes": o.metadata_bytes,
+    }
+    arrays = dict(
+        meta=json.dumps(meta, sort_keys=True),
+        block=trace.block,
+        array_id=trace.array_id,
+        epoch_id=trace.epoch_id,
+        iter_id=trace.iter_id,
+        elem=trace.elem,
+        iter_epochs=np.asarray(trace.iter_epochs, dtype=np.int64).reshape(-1, 2),
+        l1_hit=trace.profile.l1_hit,
+        l2_hit=trace.profile.l2_hit,
+        llc_hit=trace.profile.llc_hit,
+        nl_blocks=trace.nl_blocks,
+        nl_pos=trace.nl_pos,
+    )
+    for field in _OUTCOME_ARRAYS:
+        arrays[f"o_{field}"] = getattr(o, field)
+    return arrays
+
+
+def _unpack(spec: WorkloadSpec, z) -> WorkloadTrace:
+    meta = json.loads(str(z["meta"][()]))
+    if meta.get("schema") != ARTIFACT_SCHEMA:
+        raise ValueError(f"artifact schema {meta.get('schema')!r}")
+
+    block = z["block"]
+    iter_id = z["iter_id"]
+    l1_hit = z["l1_hit"]
+    # The L2 substream is derived exactly as simulate_demand derives it.
+    l2_pos = np.flatnonzero(~l1_hit).astype(np.int64)
+    profile = DemandProfile(
+        blocks=block,
+        iter_id=iter_id,
+        l1_hit=l1_hit,
+        l2_pos=l2_pos,
+        l2_blocks=block[l2_pos],
+        l2_iter=iter_id[l2_pos],
+        l2_hit=z["l2_hit"],
+        llc_hit=z["llc_hit"],
+        cfg=spec.hierarchy,
+    )
+    outcome = PrefetchOutcome(
+        evicted_early_total=meta["nl_evicted_early_total"],
+        metadata_bytes=meta["nl_metadata_bytes"],
+        **{field: z[f"o_{field}"] for field in _OUTCOME_ARRAYS},
+    )
+    cfg_trace = TraceConfig(
+        num_vertices=meta["num_vertices"],
+        num_edges=meta["num_edges"],
+        base=meta["base"],
+    )
+    return WorkloadTrace(
+        spec=spec,
+        kernel=meta["kernel"],
+        dataset=meta["dataset"],
+        cfg_trace=cfg_trace,
+        block=block,
+        array_id=z["array_id"],
+        epoch_id=z["epoch_id"],
+        iter_id=iter_id,
+        elem=z["elem"],
+        iter_epochs=[(int(a), int(b)) for a, b in z["iter_epochs"]],
+        profile=profile,
+        nl_blocks=z["nl_blocks"],
+        nl_pos=z["nl_pos"],
+        nl_outcome=outcome,
+        eval_from_pos=meta["eval_from_pos"],
+        session=make_session(spec, cfg_trace),
+    )
+
+
+__all__ = ["ARTIFACT_SCHEMA", "ArtifactCache", "ENV_VAR", "default_cache_dir"]

@@ -1,0 +1,262 @@
+"""Parallel grid scheduler: shard (workload x prefetcher) cells across a
+process pool.
+
+The unit of work is one *task* = (WorkloadSpec, [prefetcher subset]).  Each
+worker materializes its task's trace once — an artifact-cache load when
+present, else a full build persisted for every later task and run — and
+scores the task's prefetchers sequentially against it.  An unmaterialized
+workload is always a single task, so its expensive build happens exactly
+once, in the worker that scores it; a workload already in the artifact
+store loads in seconds, so its prefetcher list is split across sibling
+tasks (targeting ~2 tasks per worker, heaviest dispatched first) so one
+heavy workload cannot serialize the tail of the run.
+
+Determinism: workers return ``(task_index, [(name, metrics), ...])`` and
+the parent reassembles cells in the exact workload-major, prefetcher-minor
+order the serial path uses, so parallel output is bit-identical to serial
+(asserted in ``tests/test_exec.py`` and gated in CI by ``bench --smoke``).
+
+Workers are *spawned*, not forked: the simulator holds live JAX/XLA thread
+pools, and forking a process with running thread pools can deadlock the
+child.  Spawned workers re-import the package, so the parent exports the
+``repro`` source root on ``PYTHONPATH`` for the pool's lifetime.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+from concurrent.futures import ProcessPoolExecutor, as_completed
+from multiprocessing import get_context
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import repro
+from repro.core.driver import WorkloadSpec, WorkloadTrace
+from repro.core.exec.artifacts import ArtifactCache
+from repro.core.experiment import score_prefetcher
+from repro.memsim import PrefetchMetrics
+
+
+# Per-worker-process memo of the last materialized trace: pool processes
+# run many tasks, and consecutive tasks for the same workload (a split
+# prefetcher list) should not reload the artifact.  One entry bounds memory.
+_LAST_TRACE: Optional[Tuple[Tuple[str, WorkloadSpec], WorkloadTrace]] = None
+
+
+def _materialize(spec: WorkloadSpec, cache_root: str) -> WorkloadTrace:
+    global _LAST_TRACE
+    key = (cache_root, spec)
+    if _LAST_TRACE is not None and _LAST_TRACE[0] == key:
+        return _LAST_TRACE[1]
+    cache = ArtifactCache(cache_root)
+    trace = cache.load(spec)
+    if trace is None:
+        trace = spec.build()
+        cache.save(spec, trace)
+    _LAST_TRACE = (key, trace)
+    return trace
+
+
+def _run_task(task) -> Tuple[int, List[Tuple[str, PrefetchMetrics]]]:
+    """Worker body: build-or-load one trace, score its prefetchers."""
+    import time
+
+    index, spec, prefetchers, cache_root = task
+    debug = os.environ.get("REPRO_EXEC_DEBUG")
+    t0 = time.perf_counter()
+    trace = _materialize(spec, cache_root)
+    if debug:
+        print(
+            f"[worker {os.getpid()}] {spec.kernel}/{spec.dataset} "
+            f"materialize {time.perf_counter() - t0:.1f}s",
+            flush=True,
+        )
+    scored = []
+    for name, gen in prefetchers:
+        t0 = time.perf_counter()
+        scored.append((name, score_prefetcher(trace, name, gen)))
+        if debug:
+            print(
+                f"[worker {os.getpid()}] {spec.kernel}/{spec.dataset} "
+                f"score {name} {time.perf_counter() - t0:.1f}s",
+                flush=True,
+            )
+    return index, scored
+
+
+def _split(items: Sequence, n: int) -> List[list]:
+    """Split into ``n`` (or fewer) contiguous near-equal chunks."""
+    n = max(1, min(n, len(items)))
+    size, rem = divmod(len(items), n)
+    out, i = [], 0
+    for j in range(n):
+        step = size + (1 if j < rem else 0)
+        out.append(list(items[i : i + step]))
+        i += step
+    return out
+
+
+def _plan(
+    specs: Sequence[WorkloadSpec],
+    prefetchers: Sequence[tuple],
+    workers: int,
+    artifacts: ArtifactCache,
+) -> Tuple[List[WorkloadSpec], List[tuple]]:
+    """(unique specs, [(spec, prefetcher chunk), ...]) task list.
+
+    An *unmaterialized* workload is one task — its (expensive) build must
+    happen exactly once, in the worker that scores it.  A workload already
+    in the artifact store loads in seconds, so its prefetcher list may be
+    split across sibling tasks for load balance; we aim for ~2 tasks per
+    worker so one heavy workload cannot serialize the tail of the run.
+    """
+    unique = list(dict.fromkeys(specs))
+    target_tasks = max(2 * workers, len(unique))
+    chunks_per_cached = max(1, -(-target_tasks // len(unique)))  # ceil
+    tasks = []
+    for spec in unique:
+        n_chunks = chunks_per_cached if artifacts.has(spec) else 1
+        for chunk in _split(prefetchers, n_chunks):
+            tasks.append((spec, chunk))
+    return unique, tasks
+
+
+def _check_picklable(prefetchers: Sequence[tuple]) -> None:
+    for name, gen in prefetchers:
+        try:
+            pickle.dumps(gen)
+        except Exception as e:
+            raise ValueError(
+                f"prefetcher {name!r} is not picklable and cannot be shipped "
+                "to worker processes — parallel execution needs module-level "
+                "generators or registry factories (lambdas and closures are "
+                "not); run serially or register the prefetcher"
+            ) from e
+
+
+def rows_equal(a: List[dict], b: List[dict]) -> bool:
+    """Exact equality of two ``ExperimentResult.rows()`` lists.
+
+    The ``info`` entry holds prefetcher-side stats (scalars and numpy
+    arrays) and is compared element-wise; every other metric must match
+    bit-for-bit.  This is the parallel-vs-serial parity predicate used by
+    the engine tests and the CI bench smoke gate.
+    """
+    if len(a) != len(b):
+        return False
+    for ra, rb in zip(a, b):
+        if set(ra) != set(rb):
+            return False
+        for k in ra:
+            va, vb = ra[k], rb[k]
+            if k == "info":
+                if set(va) != set(vb):
+                    return False
+                if not all(np.array_equal(va[ik], vb[ik]) for ik in va):
+                    return False
+            elif va != vb:
+                return False
+    return True
+
+
+def run_grid(
+    specs: Sequence[WorkloadSpec],
+    prefetchers: Sequence[Tuple[str, object]],
+    *,
+    workers: int,
+    artifacts: Optional[ArtifactCache] = None,
+    verbose: bool = False,
+) -> Tuple[Dict[tuple, PrefetchMetrics], Dict[WorkloadSpec, WorkloadTrace]]:
+    """Evaluate the (specs x prefetchers) grid across ``workers`` processes.
+
+    Returns ``({(spec, name): metrics}, {spec: trace})``, where the trace
+    dict holds parent-side builds (none in the common path — every task's
+    trace lands in the artifact store for on-demand loading).  The caller
+    owns cell ordering (the metrics mapping is order-free, deterministic).
+    """
+    artifacts = artifacts if artifacts is not None else ArtifactCache()
+    _check_picklable(prefetchers)
+    unique, tasks = _plan(specs, prefetchers, workers, artifacts)
+
+    # Longest-task-first dispatch: a heavy task submitted last would
+    # serialize the tail of the run.  Artifact size x chunk length is the
+    # cost proxy; a cold (unbuilt) workload is the most expensive unit of
+    # all, so unknown costs rank first and the build overlaps the warm
+    # work.  Execution order never affects results — cells are
+    # reassembled by key.
+    def _cost(task):
+        try:
+            return artifacts.path_for(task[0]).stat().st_size * len(task[1])
+        except OSError:
+            return float("inf")
+
+    tasks.sort(key=_cost, reverse=True)
+
+    traces: Dict[WorkloadSpec, WorkloadTrace] = {}
+    metrics: Dict[tuple, PrefetchMetrics] = {}
+    # repro may be a namespace package (no __init__), so resolve its
+    # directory via __path__ when __file__ is absent.
+    if getattr(repro, "__file__", None):
+        pkg_dir = os.path.dirname(os.path.abspath(repro.__file__))
+    else:
+        pkg_dir = os.path.abspath(next(iter(repro.__path__)))
+    src_root = os.path.dirname(pkg_dir)
+    old_pythonpath = os.environ.get("PYTHONPATH")
+    pythonpath = [src_root] + ([old_pythonpath] if old_pythonpath else [])
+    # Each spawned worker would otherwise re-JIT the lax.scan cache passes
+    # (seconds per process); a persistent compilation cache next to the
+    # workload artifacts makes that a one-time cost per geometry.  An
+    # externally-set cache dir wins, so a parent process that set one
+    # before importing JAX shares its compiles with every worker.
+    jax_cache = os.environ.get(
+        "JAX_COMPILATION_CACHE_DIR", str(artifacts.root / "jax-cache")
+    )
+    child_env = {
+        # Spawned interpreters re-import the package from scratch.
+        "PYTHONPATH": os.pathsep.join(pythonpath),
+        "JAX_COMPILATION_CACHE_DIR": jax_cache,
+        # Cache even sub-second compiles (the default threshold is 1s).
+        "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": os.environ.get(
+            "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0"
+        ),
+    }
+    saved_env = {k: os.environ.get(k) for k in child_env}
+    os.environ.update(child_env)
+    # ``workers`` is the requested shard width; the actual pool never
+    # exceeds the task count or the core count — extra spawned processes
+    # on a saturated host only add import/contention overhead.
+    pool_size = max(1, min(workers, len(tasks), os.cpu_count() or workers))
+    try:
+        ctx = get_context("spawn")
+        with ProcessPoolExecutor(max_workers=pool_size, mp_context=ctx) as pool:
+            futures = {
+                pool.submit(_run_task, (i, spec, chunk, str(artifacts.root))): i
+                for i, (spec, chunk) in enumerate(tasks)
+            }
+            for fut in as_completed(futures):
+                index, scored = fut.result()
+                spec = tasks[index][0]
+                for name, m in scored:
+                    metrics[(spec, name)] = m
+                    if verbose:
+                        print(
+                            f"[{spec.kernel}/{spec.dataset}] {name}: "
+                            f"speedup {m.speedup:.2f} coverage {m.coverage:.2f} "
+                            f"accuracy {m.accuracy:.2f}"
+                        )
+    finally:
+        for key, value in saved_env.items():
+            if value is None:
+                os.environ.pop(key, None)
+            else:
+                os.environ[key] = value
+
+    # Workers persisted their traces in the artifact store; the caller
+    # loads them from there on demand (``traces`` stays empty unless a
+    # future planner gives the parent build work again).
+    return metrics, traces
+
+
+__all__ = ["rows_equal", "run_grid"]

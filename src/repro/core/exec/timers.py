@@ -1,0 +1,77 @@
+"""Shared wall-clock timing for the execution engine and benchmarks.
+
+All timing in this repo goes through ``time.perf_counter`` — it is
+monotonic and has the highest available resolution, whereas ``time.time()``
+has coarse granularity on some platforms and jumps under clock adjustment,
+which makes microsecond-scale measurements meaningless.
+
+Two layers:
+
+- :func:`time_s` / :func:`time_us` time one callable (used by the
+  ``benchmarks/run.py`` micro-benches and ``benchmarks/bench.py``).
+- Pipeline stage instrumentation: the workload driver and the experiment
+  scorer wrap their phases in ``with stage("trace_gen"): ...``; a caller
+  wanting the breakdown activates collection with ``with collect_stages()
+  as times: ...``.  With no collector active ``stage`` is a no-op, so the
+  hot path pays nothing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+_ACTIVE: Optional[Dict[str, float]] = None
+
+
+def time_s(fn: Callable[[], object], repeats: int = 1, warmup: int = 0) -> float:
+    """Mean wall-clock seconds per call of ``fn`` over ``repeats`` calls."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def time_us(fn: Callable[[], object], repeats: int = 3) -> float:
+    """Mean microseconds per call, after one warmup (compile) call."""
+    return time_s(fn, repeats=repeats, warmup=1) * 1e6
+
+
+@contextlib.contextmanager
+def collect_stages(
+    into: Optional[Dict[str, float]] = None,
+) -> Iterator[Dict[str, float]]:
+    """Collect ``stage()`` durations from the enclosed block into a dict.
+
+    Durations accumulate per stage name, so a block that builds several
+    workloads reports total seconds spent in each pipeline stage.  Nested
+    collectors shadow outer ones for their extent.
+    """
+    global _ACTIVE
+    times = into if into is not None else {}
+    prev, _ACTIVE = _ACTIVE, times
+    try:
+        yield times
+    finally:
+        _ACTIVE = prev
+
+
+@contextlib.contextmanager
+def stage(name: str) -> Iterator[None]:
+    """Accumulate this block's duration under ``name`` (no-op when no
+    :func:`collect_stages` collector is active)."""
+    if _ACTIVE is None:
+        yield
+        return
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        if _ACTIVE is not None:
+            _ACTIVE[name] = _ACTIVE.get(name, 0.0) + (time.perf_counter() - t0)
+
+
+__all__ = ["collect_stages", "stage", "time_s", "time_us"]

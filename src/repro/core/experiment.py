@@ -26,11 +26,14 @@ bit-identical to ``Experiment`` results.
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Mapping
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.driver import WorkloadSpec, WorkloadTrace
+from repro.core.exec.artifacts import ArtifactCache
+from repro.core.exec.timers import stage
 from repro.core.registry import Prefetcher, resolve_prefetchers
 from repro.memsim import (
     SCALED,
@@ -45,31 +48,32 @@ def score_prefetcher(
     workload: WorkloadTrace, name: str, generate: Prefetcher
 ) -> PrefetchMetrics:
     """Score one prefetcher in the composite (next-line + X) configuration."""
-    stream = generate(workload)
-    blocks = np.concatenate([workload.nl_blocks, stream.blocks])
-    pos = np.concatenate([workload.nl_pos, stream.pos])
-    issuer = np.concatenate(
-        [
-            np.zeros(len(workload.nl_blocks), np.int8),
-            np.ones(len(stream.blocks), np.int8),
-        ]
-    )
-    outcome = simulate_with_prefetch(
-        workload.profile,
-        blocks,
-        pos,
-        pf_issuer=issuer,
-        metadata_bytes=stream.metadata_bytes,
-    )
-    m = evaluate(
-        name,
-        workload.profile,
-        outcome,
-        baseline_outcome=workload.nl_outcome,
-        eval_from_pos=workload.eval_from_pos,
-        issuer=1,
-    )
-    m.info = stream.info  # attach prefetcher-side stats
+    with stage("score"):
+        stream = generate(workload)
+        blocks = np.concatenate([workload.nl_blocks, stream.blocks])
+        pos = np.concatenate([workload.nl_pos, stream.pos])
+        issuer = np.concatenate(
+            [
+                np.zeros(len(workload.nl_blocks), np.int8),
+                np.ones(len(stream.blocks), np.int8),
+            ]
+        )
+        outcome = simulate_with_prefetch(
+            workload.profile,
+            blocks,
+            pos,
+            pf_issuer=issuer,
+            metadata_bytes=stream.metadata_bytes,
+        )
+        m = evaluate(
+            name,
+            workload.profile,
+            outcome,
+            baseline_outcome=workload.nl_outcome,
+            eval_from_pos=workload.eval_from_pos,
+            issuer=1,
+        )
+        m.info = stream.info  # attach prefetcher-side stats
     return m
 
 
@@ -79,23 +83,77 @@ class WorkloadCache:
     Each workload in an :class:`Experiment` is built once and scored by
     every prefetcher; pass the same cache instance to several experiments
     to reuse builds across them too.
+
+    ``artifacts`` optionally backs the in-memory store with the on-disk
+    :class:`~repro.core.exec.artifacts.ArtifactCache`: misses consult the
+    artifact store before building, and fresh builds are persisted there —
+    so repeat sweeps and parallel runs skip rebuilds across processes.
     """
 
-    def __init__(self):
+    def __init__(self, artifacts: Optional[ArtifactCache] = None):
         self._store: Dict[WorkloadSpec, WorkloadTrace] = {}
+        self.artifacts = artifacts
         self.builds = 0
         self.hits = 0
+        self.loads = 0  # artifact-cache (disk) hits
 
     def get_or_build(self, spec: WorkloadSpec) -> WorkloadTrace:
-        if spec not in self._store:
-            self.builds += 1
-            self._store[spec] = spec.build()
-        else:
+        if spec in self._store:
             self.hits += 1
-        return self._store[spec]
+            return self._store[spec]
+        trace = self.artifacts.load(spec) if self.artifacts is not None else None
+        if trace is not None:
+            self.loads += 1
+        else:
+            self.builds += 1
+            trace = spec.build()
+            if self.artifacts is not None:
+                self.artifacts.save(spec, trace)
+        self._store[spec] = trace
+        return trace
+
+    def evict(self, spec: WorkloadSpec) -> None:
+        """Drop the in-memory entry (the artifact, if any, stays on disk).
+
+        Lets long sweeps bound peak memory at one trace: process a
+        workload, write its results, evict, move on.
+        """
+        self._store.pop(spec, None)
 
     def __len__(self) -> int:
         return len(self._store)
+
+
+class _LazyWorkloads(Mapping):
+    """``ExperimentResult.workloads`` view that materializes traces on
+    first access (artifact-cache load, else rebuild).
+
+    After a parallel run the built traces live in the artifact store, not
+    in the parent process; loading all of them eagerly would charge every
+    grid run for workloads the caller never reads.  Keys are present up
+    front (iteration, ``len``, membership are free); values materialize
+    through the experiment's workload cache on demand — including via
+    ``dict(...)``/``.items()``, which go through ``__getitem__``.
+    """
+
+    def __init__(self, loader, specs):
+        self._specs = list(specs)
+        self._keys = set(self._specs)
+        self._loader = loader
+
+    def __getitem__(self, spec):
+        if spec not in self._keys:
+            raise KeyError(spec)
+        return self._loader(spec)
+
+    def __contains__(self, spec):  # the Mapping mixin would materialize
+        return spec in self._keys
+
+    def __iter__(self):
+        return iter(self._specs)
+
+    def __len__(self):
+        return len(self._specs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,7 +178,8 @@ class ExperimentResult:
     """
 
     cells: List[CellResult]
-    workloads: Dict[WorkloadSpec, WorkloadTrace]
+    # A plain dict after a serial run; a lazy Mapping after a parallel run.
+    workloads: Mapping[WorkloadSpec, WorkloadTrace]
 
     def select(self, **filters) -> List[CellResult]:
         """Cells matching all given kernel/dataset/prefetcher/seed filters."""
@@ -173,8 +232,8 @@ class ExperimentResult:
         """The unique built trace for (kernel, dataset, seed); with several
         specs sharing those coordinates, index ``workloads`` by spec."""
         hits = [
-            w
-            for s, w in self.workloads.items()
+            s
+            for s in self.workloads
             if (s.kernel, s.dataset, s.seed) == (kernel, dataset, seed)
         ]
         if len(hits) != 1:
@@ -182,7 +241,7 @@ class ExperimentResult:
                 f"({kernel}, {dataset}, seed={seed}) matched {len(hits)} "
                 "workloads; index result.workloads by WorkloadSpec instead"
             )
-        return hits[0]
+        return self.workloads[hits[0]]
 
 
 class Experiment:
@@ -244,8 +303,20 @@ class Experiment:
             for name in self.prefetcher_names
         ]
 
-    def run(self, verbose: bool = False) -> ExperimentResult:
-        """Build every workload (cached) and score every grid cell."""
+    def run(
+        self, verbose: bool = False, workers: Optional[int] = None
+    ) -> ExperimentResult:
+        """Build every workload (cached) and score every grid cell.
+
+        ``workers=N`` (N >= 2) opts into the parallel execution engine:
+        cells are sharded across a spawned process pool, grouped by
+        workload so each trace is built once, with built traces persisted
+        in the workload artifact cache.  Cell ordering and every metric
+        are bit-identical to the serial path.  Serial (the default) stays
+        the reference implementation.
+        """
+        if workers is not None and workers > 1:
+            return self._run_parallel(workers, verbose)
         cells: List[CellResult] = []
         traces: Dict[WorkloadSpec, WorkloadTrace] = {}
         for spec in self.workload_specs:
@@ -270,6 +341,42 @@ class Experiment:
                         f"accuracy {m.accuracy:.2f}"
                     )
         return ExperimentResult(cells=cells, workloads=traces)
+
+    def _run_parallel(self, workers: int, verbose: bool) -> ExperimentResult:
+        from repro.core.exec import scheduler  # lazy: avoids import cycle
+
+        if self.cache.artifacts is None:
+            # Workers share builds through the artifact store; attach the
+            # default one so the in-process cache sees the same artifacts.
+            self.cache.artifacts = ArtifactCache()
+        metrics, prebuilt = scheduler.run_grid(
+            self.workload_specs,
+            self.prefetchers,
+            workers=workers,
+            artifacts=self.cache.artifacts,
+            verbose=verbose,
+        )
+        # Later experiments sharing this cache reuse any parent-side builds.
+        for spec, trace in prebuilt.items():
+            self.cache._store.setdefault(spec, trace)
+        cells = [
+            CellResult(
+                kernel=spec.kernel,
+                dataset=spec.dataset,
+                prefetcher=name,
+                seed=spec.seed,
+                metrics=metrics[(spec, name)],
+                spec=spec,
+            )
+            for spec in self.workload_specs
+            for name in self.prefetcher_names
+        ]
+        # Workers persisted their traces in the artifact store; materialize
+        # them lazily so runs that only read metrics never pay the loads.
+        workloads = _LazyWorkloads(
+            self.cache.get_or_build, dict.fromkeys(self.workload_specs)
+        )
+        return ExperimentResult(cells=cells, workloads=workloads)
 
 
 __all__ = [

@@ -6,7 +6,7 @@ composite-baseline L2 misses.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 

@@ -17,6 +17,8 @@ import numpy as np
 from repro.kernels.amc_gather.amc_gather import amc_gather, amc_gather_segment_sum
 from repro.kernels.amc_gather.ref import gather_ref
 
+__all__ = ["AMCGatherSession", "amc_gather", "amc_gather_segment_sum", "gather_ref"]
+
 
 class AMCGatherSession:
     def __init__(self, interpret: bool = True):

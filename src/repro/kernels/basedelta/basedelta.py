@@ -24,7 +24,6 @@ SENTINEL = jnp.int32(-(2**31) + 1)
 def _compress_kernel(blocks_ref, count_ref, delta_ref, mode_ref):
     x = blocks_ref[...]  # (BE, W) int32 block addresses (low bits)
     cnt = count_ref[...]  # (BE, 1)
-    w = x.shape[1]
     lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
     valid = lane < cnt
     base = x[:, 0:1]

@@ -1,7 +1,6 @@
 """Jitted public wrapper: (B, S, H, hd) attention via the Pallas kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attn.flash_attn import flash_attention

@@ -70,8 +70,8 @@ def _cfg_info(arch: str, shape: str) -> dict:
         cspec = specs.cache_spec(cfg, SHAPES[shape])
         info["cache_bytes"] = float(
             sum(
-                np.prod(l.shape) * l.dtype.itemsize
-                for l in __import__("jax").tree.leaves(cspec)
+                np.prod(leaf.shape) * leaf.dtype.itemsize
+                for leaf in __import__("jax").tree.leaves(cspec)
             )
         )
     return info

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch.steps import make_serve_step
 from repro.models import init_cache, init_params
 from repro.runtime import ElasticMesh
 

@@ -6,13 +6,13 @@ train/prefill/decode step functions against these.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models.model import init_cache, init_params, padded_vocab
+from repro.models.model import init_cache, init_params
 from repro.optim.adamw import AdamWConfig, adamw_init
 
 SDS = jax.ShapeDtypeStruct

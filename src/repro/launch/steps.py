@@ -4,8 +4,7 @@ These are what the dry-run lowers and what train.py/serve.py execute.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

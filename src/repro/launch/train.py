@@ -19,15 +19,14 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.data import SyntheticLMData
 from repro.launch.steps import make_train_step
-from repro.models import init_params, params_shardings, batch_shardings
+from repro.models import init_params, params_shardings
 from repro.optim import AdamWConfig, adamw_init
-from repro.optim.grad_compress import error_feedback_update, init_error_buf
+from repro.optim.grad_compress import init_error_buf
 from repro.runtime import ElasticMesh, StragglerMonitor
 
 

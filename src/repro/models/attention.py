@@ -12,7 +12,6 @@ long_500k where batch(=1) cannot cover the data axis.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -61,7 +60,7 @@ def blocked_attention(
     q_pos = q_offset + jnp.arange(sq)
 
     def body(carry, inp):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kblk, vblk, blk_idx = inp
         k_pos = blk_idx * block_size + jnp.arange(block_size)
         s = jnp.einsum(
@@ -77,16 +76,16 @@ def blocked_attention(
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + p.sum(axis=-1)
+        lsum_new = lsum * corr + p.sum(axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32)
         )
-        return (m_new, l_new, acc_new), None
+        return (m_new, lsum_new, acc_new), None
 
     m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, h, sq), jnp.float32)
     acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         body,
         (m0, l0, acc0),
         (
@@ -95,7 +94,7 @@ def blocked_attention(
             jnp.arange(nblocks),
         ),
     )
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, hd)
 
 

@@ -4,7 +4,7 @@ Pure-function JAX (no framework deps); parameters are plain pytrees.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ Design choices that matter at scale:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -475,9 +473,6 @@ def _hybrid_forward(cfg, params, x, positions, return_cache):
     )
     tail = jax.tree.map(lambda a: a[groups * every :], blocks)
 
-    states_all = []
-    kv_all = []
-
     def group_body(x, gp):
         def inner(x, lp):
             x, st = mamba_layer(x, lp)
@@ -676,7 +671,6 @@ def _hybrid_decode(cfg, params, x, cache, mesh, seq_sharded):
     groups = cfg.num_layers // every
     rest = cfg.num_layers - groups * every
     cache_len = cache["len"]
-    b = x.shape[0]
 
     grouped = jax.tree.map(
         lambda a: a[: groups * every].reshape((groups, every) + a.shape[1:]), blocks

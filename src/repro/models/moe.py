@@ -59,7 +59,6 @@ def _dispatch_plan(expert_idx: jnp.ndarray, num_experts: int, capacity: int):
     flat_e = expert_idx.reshape(-1)
     order = jnp.argsort(flat_e)  # stable
     sorted_e = flat_e[order]
-    ones = jnp.ones_like(sorted_e)
     # rank within expert = position - first position of that expert
     seg_start = jnp.concatenate(
         [jnp.zeros(1, jnp.int32), (sorted_e[1:] != sorted_e[:-1]).astype(jnp.int32)]
@@ -84,7 +83,6 @@ def moe_ffn(
     ``recorded_plan`` next step (AMC recorded-dispatch)."""
     n, d = x.shape
     e = p.router.shape[1]
-    f = p.w_gate.shape[2]
     capacity = max(int(capacity_factor * n * top_k / e), 1)
 
     expert_idx, weights, aux = route_topk(x, p.router, top_k)

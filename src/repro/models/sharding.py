@@ -14,7 +14,7 @@ actual mesh so every (arch x mesh) pair lowers cleanly.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import numpy as np
@@ -79,14 +79,12 @@ def param_spec(cfg: ModelConfig, mesh: Mesh, path: str, shape) -> P:
     fsdp = "data" if _use_fsdp(cfg) else None
     tp = "model"
     nd = len(shape)
-    hd = cfg.resolved_head_dim
 
     def ok(dim_size, axis):
         return _div(dim_size, mesh, axis)
 
     name = path.split("/")[-1]
     stacked = path.startswith("blocks/") or path.startswith("encoder/")
-    pre = (None,) if stacked else ()
     # how many leading stack dims (hybrid grouping adds none at init)
     lead = 1 if stacked and nd >= 2 else 0
 

@@ -27,7 +27,10 @@ class AdamWConfig:
 
 def adamw_init(params: Any, cfg: AdamWConfig) -> Any:
     dt = jnp.dtype(cfg.state_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),
@@ -38,7 +41,7 @@ def adamw_init(params: Any, cfg: AdamWConfig) -> Any:
 def global_norm(tree: Any) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
     return jnp.sqrt(
-        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+        sum(jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in leaves)
     )
 
 

@@ -18,7 +18,7 @@ the planning/resharding logic is identical on real hardware.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import numpy as np

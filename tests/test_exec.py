@@ -1,0 +1,176 @@
+"""The parallel execution engine: scheduler, artifact cache, timers.
+
+Covers the engine's contracts: parallel (``workers=2``) results are
+bit-identical to serial in the same cell order; the workload artifact
+cache round-trips a built trace to metrics-identical scoring; cache keys
+move when the spec or the trace-code version changes (invalidation);
+corrupt artifacts read as misses; unpicklable prefetchers are rejected
+with a useful error before any process spawns.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ArtifactCache,
+    Experiment,
+    WorkloadCache,
+    WorkloadSpec,
+    score_prefetcher,
+)
+from repro.core.exec.scheduler import _plan, _split, rows_equal
+from repro.core.exec.timers import collect_stages, stage, time_s
+from repro.core.registry import get_prefetcher
+
+SPEC = WorkloadSpec("pgd", "comdblp")
+PREFETCHERS = ["rnr", "nextline2", "ideal"]
+
+
+@pytest.fixture(scope="module")
+def arts(tmp_path_factory):
+    return ArtifactCache(tmp_path_factory.mktemp("workload-artifacts"))
+
+
+@pytest.fixture(scope="module")
+def built(arts):
+    """One real trace, built cold and persisted (collecting stage times)."""
+    with collect_stages() as stages:
+        trace = SPEC.build()
+    arts.save(SPEC, trace)
+    assert stages["trace_gen"] > 0 and stages["demand_sim"] > 0
+    return trace
+
+
+# ---------------------------------------------------------------- artifacts
+
+
+def test_artifact_roundtrip_is_bit_identical(arts, built):
+    loaded = arts.load(SPEC)
+    assert loaded is not None and loaded is not built
+    for field in ("block", "iter_id", "elem", "nl_blocks", "nl_pos"):
+        np.testing.assert_array_equal(getattr(loaded, field), getattr(built, field))
+    assert loaded.iter_epochs == built.iter_epochs
+    assert loaded.eval_from_pos == built.eval_from_pos
+    assert loaded.session.regs == built.session.regs
+    # the contract that matters: scoring a loaded trace reproduces the
+    # fresh-build metrics exactly
+    gen = get_prefetcher("rnr").instantiate()
+    fresh = score_prefetcher(built, "rnr", gen).row()
+    reloaded = score_prefetcher(loaded, "rnr", gen).row()
+    fresh_info, reloaded_info = fresh.pop("info"), reloaded.pop("info")
+    assert fresh == reloaded
+    assert set(fresh_info) == set(reloaded_info)
+    for k in fresh_info:
+        np.testing.assert_array_equal(fresh_info[k], reloaded_info[k])
+
+
+def test_artifact_key_moves_with_spec_and_code_version(arts, built, monkeypatch):
+    other = WorkloadSpec("pgd", "comdblp", target_elem_size=16)
+    assert arts.path_for(other) != arts.path_for(SPEC)
+    assert arts.load(other) is None  # content-addressed: no false sharing
+    # bumping the trace-code version invalidates every persisted artifact
+    path_v1 = arts.path_for(SPEC)
+    monkeypatch.setattr("repro.core.driver.TRACE_CODE_VERSION", "test-bump")
+    assert arts.path_for(SPEC) != path_v1
+    assert arts.load(SPEC) is None
+    monkeypatch.undo()
+    assert arts.load(SPEC) is not None
+
+
+def test_corrupt_artifact_reads_as_miss(arts):
+    bad = WorkloadSpec("pgd", "comdblp", frontier_elem_size=2)
+    arts.root.mkdir(parents=True, exist_ok=True)
+    arts.path_for(bad).write_bytes(b"not an npz")
+    misses = arts.misses
+    assert arts.load(bad) is None
+    assert arts.misses == misses + 1
+
+
+def test_workload_cache_disk_backing(arts, built):
+    cache = WorkloadCache(artifacts=arts)
+    trace = cache.get_or_build(SPEC)
+    assert cache.loads == 1 and cache.builds == 0  # disk hit, no rebuild
+    assert cache.get_or_build(SPEC) is trace
+    assert cache.hits == 1  # second call is an in-memory hit
+
+
+# ---------------------------------------------------------------- scheduler
+
+
+def test_parallel_matches_serial_bit_identical(arts, built):
+    serial = Experiment(
+        workloads=[SPEC], prefetchers=PREFETCHERS, cache=WorkloadCache(artifacts=arts)
+    ).run()
+    parallel = Experiment(
+        workloads=[SPEC], prefetchers=PREFETCHERS, cache=WorkloadCache(artifacts=arts)
+    ).run(workers=2)
+    assert rows_equal(serial.rows(), parallel.rows())
+    # deterministic cell order: workload-major, prefetcher-minor, as serial
+    assert [c.prefetcher for c in parallel.cells] == PREFETCHERS
+    # the result surface still exposes the built workload
+    assert parallel.workload("pgd", "comdblp").num_accesses == built.num_accesses
+    # the lazy view materializes real traces through every access path,
+    # including dict()'s C-level iteration
+    assert SPEC in parallel.workloads and len(parallel.workloads) == 1
+    as_dict = dict(parallel.workloads)
+    assert all(t.num_accesses == built.num_accesses for t in as_dict.values())
+
+
+def test_parallel_rejects_unpicklable_prefetcher():
+    exp = Experiment(workloads=[SPEC], prefetchers=[("lam", lambda workload: None)])
+    with pytest.raises(ValueError, match="not picklable"):
+        exp.run(workers=2)
+
+
+def test_plan_splits_only_materialized_workloads(arts, built, tmp_path):
+    pairs = [(n, lambda w: None) for n in ("a", "b", "c")]
+    specs = [SPEC, WorkloadSpec("cc", "comdblp")]
+    # cold store: one task per workload regardless of workers — the build
+    # must happen exactly once, in the worker that scores it
+    cold = ArtifactCache(tmp_path / "empty")
+    unique, tasks = _plan(specs, pairs, workers=4, artifacts=cold)
+    assert len(unique) == 2 and len(tasks) == 2
+    assert all(len(chunk) == 3 for _, chunk in tasks)
+    # SPEC is materialized in ``arts``: its prefetcher list splits, the
+    # unmaterialized cc workload stays whole
+    unique, tasks = _plan(specs, pairs, workers=4, artifacts=arts)
+    split = [chunk for spec, chunk in tasks if spec == SPEC]
+    whole = [chunk for spec, chunk in tasks if spec != SPEC]
+    assert len(split) > 1 and len(whole) == 1
+    assert sorted(n for chunk in split for n, _ in chunk) == ["a", "b", "c"]
+    assert [n for n, _ in whole[0]] == ["a", "b", "c"]
+    # duplicate specs collapse to one workload
+    unique, tasks = _plan([specs[1], specs[1]], pairs, workers=1, artifacts=cold)
+    assert len(unique) == 1 and len(tasks) == 1
+
+
+def test_split_covers_all_items_in_order():
+    assert _split([1, 2, 3, 4, 5], 2) == [[1, 2, 3], [4, 5]]
+    assert _split([1], 4) == [[1]]
+    assert _split([1, 2], 2) == [[1], [2]]
+
+
+def test_rows_equal_detects_divergence():
+    a = [{"speedup": 1.0, "info": {"x": np.arange(3)}}]
+    b = [{"speedup": 1.0, "info": {"x": np.arange(3)}}]
+    assert rows_equal(a, b)
+    b[0]["info"]["x"] = np.arange(4)
+    assert not rows_equal(a, b)
+    assert not rows_equal(a, [{"speedup": 1.5, "info": {"x": np.arange(3)}}])
+    assert not rows_equal(a, [])
+
+
+# ------------------------------------------------------------------- timers
+
+
+def test_stage_collection_accumulates_and_is_noop_when_inactive():
+    with collect_stages() as times:
+        with stage("phase"):
+            pass
+        with stage("phase"):
+            pass
+    assert times["phase"] >= 0 and len(times) == 1
+    with stage("orphan"):  # no active collector: must not raise or record
+        pass
+    assert "orphan" not in times
+    assert time_s(lambda: None, repeats=2, warmup=1) >= 0

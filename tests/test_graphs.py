@@ -1,6 +1,5 @@
 """Graph substrate tests: CSR invariants, generators, dynamics, partition."""
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -8,7 +7,6 @@ except ImportError:  # bare environment: seeded stub strategies
     from _hypothesis_fallback import given, settings, st
 
 from repro.graphs import (
-    CSRGraph,
     from_edges,
     make_dataset,
     make_evolving_pair,

@@ -19,11 +19,11 @@ from repro.kernels.basedelta.basedelta import (
     basedelta_compress_tiles,
     basedelta_decompress_tiles,
 )
-from repro.kernels.basedelta.ops import compress_entries, roundtrip
+from repro.kernels.basedelta.ops import roundtrip
 from repro.kernels.basedelta.ref import compress_ref, decompress_ref
 from repro.kernels.flash_attn.ops import mha
 from repro.kernels.flash_attn.ref import attention_ref
-from repro.kernels.ssd_scan.ref import ssd_naive, ssd_ref
+from repro.kernels.ssd_scan.ref import ssd_naive
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan
 
 
@@ -103,7 +103,7 @@ def test_amc_gather_session_replay():
     idx2 = idx1.copy()
     idx2[[3, 7]] = (idx2[[3, 7]] + 5) % 32  # 10% churn, like the graphs
     sess = AMCGatherSession(interpret=True)
-    out1 = sess.gather(table, jnp.asarray(idx1, jnp.int32))
+    sess.gather(table, jnp.asarray(idx1, jnp.int32))
     sess.update()
     out2 = sess.gather(table, jnp.asarray(idx2, jnp.int32))
     np.testing.assert_allclose(np.asarray(out2), np.asarray(table[idx2]), rtol=1e-6)

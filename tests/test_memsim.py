@@ -16,7 +16,6 @@ from repro.memsim import (
     simulate_demand,
     simulate_with_prefetch,
 )
-from repro.memsim.config import CacheLevelConfig, HierarchyConfig
 
 
 def _naive_cache(blocks, sets, ways):

@@ -9,7 +9,6 @@ import pytest
 from repro.configs import ARCH_IDS, SHAPES, cell_supported, get_config
 from repro.models import (
     decode_step,
-    forward,
     init_cache,
     init_params,
     loss_fn,
