@@ -1,13 +1,17 @@
 """Perf-trajectory benchmark harness for the experiment execution engine.
 
-Times the pipeline stages (trace generation, demand simulation,
-per-prefetcher scoring) and the end-to-end evaluation grid — serial with a
-cold workload-artifact cache, then at each ``--workers`` count against the
-warm cache — and emits a schema-stable ``BENCH_<date>.json`` at the repo
-root.  The dated JSONs accumulate as the repo's machine-readable perf
-trajectory; CI runs ``--smoke`` (1 kernel x 1 dataset x 3 prefetchers) on
-every push, uploads the JSON as a build artifact, and fails this script
-(exit 1) when the grid errors or parallel results diverge from serial.
+Times the pipeline stages (trace generation, demand simulation with
+per-level ``cache_pass[l1|l2|llc]`` breakdown, per-prefetcher scoring) and
+the end-to-end evaluation grid — serial with a cold workload-artifact
+cache, then at each ``--workers`` count against the warm cache — and emits
+a schema-stable ``BENCH_<date>.json`` at the repo root (never clobbering an
+existing file: reruns on the same date get a ``.2``, ``.3``, ... infix so
+the trajectory keeps its before/after points).  The dated JSONs accumulate
+as the repo's machine-readable perf trajectory; CI runs ``--smoke``
+(1 kernel x 1 dataset x 3 prefetchers) on every push, uploads the JSON as
+a build artifact, and fails this script (exit 1) when the grid errors,
+parallel results diverge from serial, or the set-parallel cache engine
+diverges from the serial ``lax.scan`` reference.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench [--smoke]
@@ -31,7 +35,7 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # Three prefetchers spanning the suite's families: the paper's contribution
 # (amc), a spatial baseline (vldp), and a replay baseline (rnr).  The
@@ -108,6 +112,7 @@ def main(argv=None) -> int:
     from repro.core.exec.timers import collect_stages, time_s
     from repro.core.experiment import score_prefetcher
     from repro.core.registry import resolve_prefetchers
+    from repro.memsim import current_engine, simulate_demand, use_engine
 
     if args.kernels or args.datasets:
         default = SMOKE_CELLS if args.smoke else FULL_CELLS
@@ -139,9 +144,46 @@ def main(argv=None) -> int:
     with collect_stages() as stages:
         trace = specs[0].build()
     score_s = {}
+    score_stages: dict = {}
     for name, gen in resolve_prefetchers(stage_names):
-        score_s[name] = time_s(partial(score_prefetcher, trace, name, gen))
+        with collect_stages(into=score_stages):
+            score_s[name] = time_s(partial(score_prefetcher, trace, name, gen))
         print(f"[bench] score {name}: {score_s[name]:.2f}s")
+
+    def _level_times(d):
+        return {
+            lvl: d.get(f"cache_pass[{lvl}]", 0.0) for lvl in ("l1", "l2", "llc")
+        }
+
+    # --- engine/reference divergence gate: the set-parallel engine's hit
+    # masks and one scored cell must be bit-identical to the serial scan.
+    engine = current_engine()
+    engine_ok = True
+    if engine != "reference":
+        blocks, iters, cfg = trace.block, trace.iter_id, trace.spec.hierarchy
+        prof = trace.profile
+        with use_engine("reference"):
+            ref_prof = simulate_demand(blocks, iters, cfg)
+            pname, pgen = resolve_prefetchers(stage_names[:1])[0]
+            ref_row = score_prefetcher(trace, pname, pgen).row()
+        eng_row = score_prefetcher(trace, pname, pgen).row()
+        import numpy as np
+
+        engine_ok = bool(
+            np.array_equal(prof.l1_hit, ref_prof.l1_hit)
+            and np.array_equal(prof.l2_hit, ref_prof.l2_hit)
+            and np.array_equal(prof.llc_hit, ref_prof.llc_hit)
+        ) and rows_equal([eng_row], [ref_row])
+        print(
+            f"[bench] engine {engine} vs reference: "
+            f"{'ok' if engine_ok else 'DIVERGED'}"
+        )
+        if not engine_ok:
+            print(
+                f"[bench] ENGINE FAILURE: {engine} diverges from the "
+                "serial lax.scan reference",
+                file=sys.stderr,
+            )
     del trace
 
     # --- end-to-end grid wall-clock: serial cold, then warm cache per pool.
@@ -186,24 +228,35 @@ def main(argv=None) -> int:
             "prefetchers": names,
             "cells": len(specs) * len(names),
         },
+        "cache_engine": engine,
         "stages_s": {
             "trace_gen": stages.get("trace_gen", 0.0),
             "demand_sim": stages.get("demand_sim", 0.0),
+            "cache_pass": _level_times(stages),
             "score": score_s,
+            "score_cache_pass": _level_times(score_stages),
         },
         "wallclock_s": {"serial_cold": serial_cold_s, "warm_by_workers": warm},
         "speedup_vs_serial_cold": {
             w: serial_cold_s / s for w, s in warm.items() if s > 0
         },
         "parallel_matches_serial": parity,
+        "engine_matches_reference": engine_ok,
     }
-    out_path = Path(args.out_dir) / f"BENCH_{out['date']}.json"
-    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"BENCH_{out['date']}.json"
+    n = 2
+    while out_path.exists():
+        # Keep earlier same-day runs: they are the "before" points of the
+        # perf trajectory.
+        out_path = out_dir / f"BENCH_{out['date']}.{n}.json"
+        n += 1
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
         f.write("\n")
     print(f"[bench] wrote {out_path}")
-    return 0 if parity else 1
+    return 0 if (parity and engine_ok) else 1
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ def kernel_bench():
     from repro.kernels.amc_gather.amc_gather import amc_gather
     from repro.kernels.basedelta.basedelta import basedelta_compress_tiles
     from repro.kernels.ssd_scan.ssd_scan import ssd_scan
-    from repro.memsim.scan_cache import cache_pass
+    from repro.memsim import cache_pass, use_engine
 
     rows = []
     key = jax.random.PRNGKey(0)
@@ -64,6 +64,11 @@ def kernel_bench():
     us = _time_us(lambda: cache_pass(blocks, 64, 8), repeats=2)
     rows.append(
         ("cache_pass_1M_accesses", us, f"{1e6 / (us / 1e6) / 1e6:.1f}M acc/s")
+    )
+    with use_engine("reference"):
+        ref_us = _time_us(lambda: cache_pass(blocks, 64, 8), repeats=2)
+    rows.append(
+        ("cache_pass_ref_1M_accesses", ref_us, f"engine x{ref_us / us:.1f}")
     )
     return rows
 

@@ -151,19 +151,26 @@ class WorkloadTrace:
         tpos_all = np.flatnonzero(tmask)
         titer = self.iter_id[tpos_all]
         tvid = self.elem[tpos_all]
+        # Both streams are iteration-sorted (positions ascend and iter_id is
+        # nondecreasing along the trace), so the per-iteration views are
+        # contiguous slices: two searchsorted calls replace the
+        # O(iterations x N) per-iteration boolean masks.
+        edges = np.arange(len(self.iter_epochs) + 1)
+        t_bounds = np.searchsorted(titer, edges)
+        m_bounds = np.searchsorted(miters, edges)
         views = []
         for it, (epoch, within) in enumerate(self.iter_epochs):
-            ts = titer == it
-            ms = miters == it
+            t0, t1 = t_bounds[it], t_bounds[it + 1]
+            m0, m1 = m_bounds[it], m_bounds[it + 1]
             views.append(
                 (
                     IterationView(
                         iteration=it,
                         within_epoch=within,
-                        target_pos=tpos_all[ts],
-                        target_vid=tvid[ts],
-                        miss_pos=mpos[ms],
-                        miss_blocks=mblocks[ms],
+                        target_pos=tpos_all[t0:t1],
+                        target_vid=tvid[t0:t1],
+                        miss_pos=mpos[m0:m1],
+                        miss_blocks=mblocks[m0:m1],
                     ),
                     epoch,
                 )

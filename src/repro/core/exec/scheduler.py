@@ -213,6 +213,8 @@ def run_grid(
     jax_cache = os.environ.get(
         "JAX_COMPILATION_CACHE_DIR", str(artifacts.root / "jax-cache")
     )
+    from repro.memsim.engine import ENGINE_ENV, current_engine
+
     child_env = {
         # Spawned interpreters re-import the package from scratch.
         "PYTHONPATH": os.pathsep.join(pythonpath),
@@ -221,6 +223,10 @@ def run_grid(
         "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": os.environ.get(
             "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0"
         ),
+        # A set_engine()/use_engine() override is process-local state the
+        # spawned interpreters would never see; export it so workers
+        # simulate on the same cache engine as the parent.
+        ENGINE_ENV: current_engine(),
     }
     saved_env = {k: os.environ.get(k) for k in child_env}
     os.environ.update(child_env)

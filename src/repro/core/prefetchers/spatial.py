@@ -62,7 +62,6 @@ def _window_dedupe(blocks: np.ndarray, pos: np.ndarray, window: int) -> np.ndarr
     key = (blocks.astype(np.int64) << np.int64(31)) | np.maximum(pos, 0)
     order = np.argsort(key)
     b, p = blocks[order], pos[order]
-    keep_sorted = np.ones(n, dtype=bool)
     same = np.zeros(n, dtype=bool)
     same[1:] = b[1:] == b[:-1]
     gap_ok = np.ones(n, dtype=bool)

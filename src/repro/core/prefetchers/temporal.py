@@ -42,6 +42,20 @@ def _expand(lo: np.ndarray, counts: np.ndarray) -> np.ndarray:
     )
 
 
+def _pc_groups(blk: np.ndarray, pos: np.ndarray, pcs: np.ndarray):
+    """Per-PC substreams via one stable argsort group-by: yields
+    ``(pc, stream, spos)`` in ascending-PC order, stream order preserved
+    within each PC.  Replaces the O(PCs x N) per-PC boolean masks."""
+    order = np.argsort(pcs, kind="stable")
+    pc_s = pcs[order]
+    starts = np.flatnonzero(np.diff(pc_s, prepend=pc_s[:1] - 1))
+    bounds = np.append(starts, len(pc_s))
+    blk_s, pos_s = blk[order], pos[order]
+    for i, g0 in enumerate(starts):
+        g1 = bounds[i + 1]
+        yield int(pc_s[g0]), blk_s[g0:g1], pos_s[g0:g1]
+
+
 def _temporal_stream(workload, degree: int, localize_pc: bool, train_once: bool):
     """Shared ISB/MISB machinery. Returns pf arrays + op counts.
 
@@ -49,7 +63,14 @@ def _temporal_stream(workload, degree: int, localize_pc: bool, train_once: bool)
     space: first-touch assignment in the initial epoch is never remapped
     (the paper: "inability to delete useless metadata"), so predictions in
     later epochs replay initial-epoch successor chains — the mechanism that
-    breaks on evolving graphs."""
+    breaks on evolving graphs.
+
+    Every PC's structural space is assigned in the first epoch (a PC with
+    no first-epoch misses gets an empty stream), so under ``train_once``
+    only first-epoch streams are ever trained and ``prev`` stays frozen —
+    exactly the dict-carrying semantics of the original per-(epoch, PC)
+    mask implementation, now via one group-by sort per epoch.
+    """
     pos, blocks, pcs, epochs = workload.l2_stream()
     miss = ~workload.nl_outcome.demand_l2_hit  # trigger & train on L2 misses
     mpos, mblk, mpc, mep = pos[miss], blocks[miss], pcs[miss], epochs[miss]
@@ -57,25 +78,30 @@ def _temporal_stream(workload, degree: int, localize_pc: bool, train_once: bool)
     out_b, out_p = [], []
     n_lookups = 0
     n_train = 0
+    # The miss stream is position-sorted and epoch ids are nondecreasing
+    # along the trace, so epochs are contiguous runs: slice by boundaries.
     uniq_eps = np.unique(mep)
-    pc_vals = np.unique(mpc) if localize_pc else np.array([0])
-    # previous epoch's per-pc streams
+    e_bounds = np.searchsorted(mep, uniq_eps)
+    e_bounds = np.append(e_bounds, len(mep))
+    # previous epoch's per-pc streams (frozen first-epoch ones if train_once)
     prev: Dict[int, tuple] = {}
-    for e in uniq_eps:
-        sel_e = mep == e
-        cur: Dict[int, tuple] = {}
-        for pc in pc_vals:
-            s = sel_e & ((mpc == pc) if localize_pc else True)
-            stream = mblk[s]
-            spos = mpos[s]
-            if train_once and int(pc) in prev:
-                cur[int(pc)] = prev[int(pc)]  # structural space frozen
-            else:
-                cur[int(pc)] = (stream, spos)
+    empty = (np.zeros(0, mblk.dtype), np.zeros(0, mpos.dtype))
+    for ei in range(len(uniq_eps)):
+        e0, e1 = e_bounds[ei], e_bounds[ei + 1]
+        blk_e, pos_e = mblk[e0:e1], mpos[e0:e1]
+        if localize_pc:
+            groups = _pc_groups(blk_e, pos_e, mpc[e0:e1])
+        else:
+            groups = [(0, blk_e, pos_e)]
+        first_epoch = ei == 0
+        cur: Dict[int, tuple] = dict(prev) if train_once and not first_epoch else {}
+        for pc, stream, spos in groups:
+            if not (train_once and not first_epoch):
+                cur[pc] = (stream, spos)
                 n_train += len(stream)
-            if int(pc) not in prev:
+            if first_epoch:
                 continue
-            tstream, _ = prev[int(pc)]
+            tstream, _ = prev.get(pc, empty)
             if len(tstream) < 2 or len(stream) == 0:
                 continue
             uniq, first = _first_occurrence_index(tstream)

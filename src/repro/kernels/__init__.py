@@ -5,6 +5,9 @@
   amc_gather  -- the paper's technique on TPU: recorded-index-stream gather
                  with double-buffered HBM->VMEM pipelining (DESIGN.md §2.2)
   basedelta   -- BaseΔ compression of recorded index/miss streams (Fig 5/6)
+  cache_sim   -- set-parallel LRU cache simulation (the memsim engine's
+                 per-set machines: sets tile the grid, tag/age carry in
+                 VMEM scratch) for TPU-side trace evaluation
   ssd_scan    -- Mamba2 SSD chunk kernel (intra-chunk MXU matmuls + carried
                  state) for the ssm/hybrid archs
 

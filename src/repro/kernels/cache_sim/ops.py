@@ -1,0 +1,52 @@
+"""Public API: full-stream cache pass through the Pallas set-parallel kernel.
+
+Reuses the engine's stable group-by-set partitioning so the kernel, the
+batched-scan engine, and the serial reference all consume identical padded
+substreams — the kernel only changes *where* the per-set machines run.
+
+Backend gating: on TPU the kernel compiles natively; off-TPU it falls back
+to interpret mode, which validates semantics (tests) but is not a fast
+path — the default ``set_parallel`` engine is the CPU production path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cache_sim.cache_sim import lru_hits
+from repro.kernels.cache_sim.ref import lru_hits_ref
+
+__all__ = ["cache_pass_pallas", "lru_hits", "lru_hits_ref"]
+
+
+def cache_pass_pallas(
+    blocks: np.ndarray,
+    sets: int,
+    ways: int,
+    set_tile: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> np.ndarray:
+    """Hit mask of one cache level, computed by the Pallas kernel.
+
+    Same contract (and bit-identical output) as
+    :func:`repro.memsim.engine.cache_pass`.
+    """
+    if len(blocks) == 0:
+        return np.zeros(0, dtype=bool)
+    from repro.memsim.engine import group_by_set  # lazy: avoids import cycle
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if set_tile is None:
+        set_tile = min(sets, 8)
+    padded, order, col, row = group_by_set(blocks, sets)
+    mat = np.ascontiguousarray(padded.T)  # (sets, L): sets->sublanes
+    hits = np.asarray(
+        lru_hits(jnp.asarray(mat), ways, set_tile=set_tile, interpret=interpret)
+    )
+    out = np.zeros(len(blocks), dtype=bool)
+    out[order] = hits[row, col].astype(bool)
+    return out

@@ -1,4 +1,4 @@
-"""Trace-driven memory-hierarchy simulator (JAX ``lax.scan`` inner loops).
+"""Trace-driven memory-hierarchy simulator.
 
 Methodology (two-pass functional simulation, DESIGN.md §2.1):
 
@@ -10,11 +10,23 @@ Methodology (two-pass functional simulation, DESIGN.md §2.1):
                  fill-time tracking -> useful/late/evicted-early counts
   pass LLC     : L2-miss substream  -> off-chip (DRAM) access counts
 
+Every pass runs through :func:`repro.memsim.engine.cache_pass` — by default
+the set-parallel batched engine (sets simulated concurrently, scan length
+~N/sets), with the original serial ``lax.scan`` retained as the
+bit-identical ``reference`` engine (``REPRO_CACHE_ENGINE=reference``).
+
 Timing is a calibrated miss-penalty IPC model with measured MLP overlap
 (:mod:`repro.memsim.timing`), reproducing the paper's *relative* speedups.
 """
 from repro.memsim.config import CacheLevelConfig, HierarchyConfig, PAPER, SCALED
-from repro.memsim.scan_cache import cache_pass, classify_prefetch_events
+from repro.memsim.engine import (
+    ENGINES,
+    cache_pass,
+    current_engine,
+    set_engine,
+    use_engine,
+)
+from repro.memsim.scan_cache import classify_prefetch_events
 from repro.memsim.hierarchy import (
     DemandProfile,
     PrefetchOutcome,
@@ -26,11 +38,15 @@ from repro.memsim.metrics import PrefetchMetrics, evaluate, geomean
 
 __all__ = [
     "CacheLevelConfig",
+    "ENGINES",
     "HierarchyConfig",
     "PAPER",
     "SCALED",
     "cache_pass",
     "classify_prefetch_events",
+    "current_engine",
+    "set_engine",
+    "use_engine",
     "DemandProfile",
     "PrefetchOutcome",
     "simulate_demand",

@@ -1,0 +1,210 @@
+"""Set-parallel cache simulation engine.
+
+Two exact equivalences let the serial one-access-per-step simulator become
+a batch of short, concurrent per-set simulations:
+
+1. **Set independence.** A set-associative cache partitions blocks by set
+   index ``b & (sets - 1)`` and replacement state never crosses sets, so a
+   stable group-by sort of the access stream by set yields ``sets``
+   independent substreams whose hit masks compose (scatter back through
+   the sort order) into the full-stream hit mask.
+2. **Stack distance ≡ LRU.** Within one set under true LRU, an access hits
+   iff its stack distance — the number of *distinct* blocks touched in the
+   set since that block's previous access — is ``< ways`` (first touches
+   are cold misses).  Hits are a property of each substream alone, so the
+   per-set machines need no coordination: the ``(max_len, sets)`` padded
+   matrix of substreams is advanced one access per step for *every* set at
+   once, and the sequential dependence chain drops from N steps to
+   ``max_len`` (~N/sets) steps of fully vectorized work.
+
+Engines (pick with ``REPRO_CACHE_ENGINE``, :func:`set_engine`, or the
+:func:`use_engine` context manager):
+
+- ``set_parallel`` (default): the padded batched ``lax.scan`` described
+  above.  Hit masks are bit-identical to the reference — the per-set age
+  counters preserve the reference's relative LRU order and tie-breaking
+  (``argmin``/``argmax`` pick the lowest way index in both) — so
+  ``TRACE_CODE_VERSION`` and every persisted workload artifact stay valid.
+- ``reference``: the original serial ``lax.scan``
+  (:mod:`repro.memsim.scan_cache`), kept as the correctness oracle the
+  property tests and the bench parity gate compare against.
+- ``pallas``: the same set-parallel machine as a Pallas TPU kernel
+  (:mod:`repro.kernels.cache_sim`), sets tiled across the grid with the
+  tag/age carry in VMEM scratch.  Gated on backend: off-TPU it runs in
+  interpret mode, which validates semantics but is not fast.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from functools import lru_cache
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.memsim import scan_cache
+
+ENGINES = ("set_parallel", "reference", "pallas")
+ENGINE_ENV = "REPRO_CACHE_ENGINE"
+DEFAULT_ENGINE = "set_parallel"
+
+_override: Optional[str] = None
+
+
+def _check(name: str) -> str:
+    if name not in ENGINES:
+        raise ValueError(f"unknown cache engine {name!r}; choose from {ENGINES}")
+    return name
+
+
+def current_engine() -> str:
+    """The active engine: ``set_engine`` override > env var > default."""
+    if _override is not None:
+        return _override
+    return _check(os.environ.get(ENGINE_ENV, DEFAULT_ENGINE))
+
+
+def set_engine(name: Optional[str]) -> None:
+    """Select the cache engine process-wide (``None`` restores env/default)."""
+    global _override
+    _override = _check(name) if name is not None else None
+
+
+@contextlib.contextmanager
+def use_engine(name: str) -> Iterator[None]:
+    """Run the enclosed block under a specific cache engine."""
+    global _override
+    prev, _override = _override, _check(name)
+    try:
+        yield
+    finally:
+        _override = prev
+
+
+def group_by_set(
+    blocks: np.ndarray, sets: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Partition a stream into padded per-set substream columns.
+
+    Returns ``(padded, order, col, row)``: ``padded`` is ``(max_len, sets)``
+    int32 with each set's substream (in stream order) occupying a column
+    prefix, tail-padded with ``-1``; ``order`` is the stable group-by sort
+    permutation, and ``padded[col, row]`` are the real accesses in sorted
+    order — scatter per-cell results back with ``out[order] = res[col, row]``.
+
+    Tail padding is harmless by construction: a pad cell can only perturb a
+    set's tag/age state *after* that set's last real access, so no real hit
+    bit depends on it (pad cells' outputs are simply never gathered).
+    """
+    blocks = np.asarray(blocks)
+    # Guard here so every engine entry point (set-parallel, Pallas ops)
+    # inherits it: an id >= 2**31 would wrap negative in int32, alias the
+    # -1 empty-way/pad sentinel, and silently corrupt the hit mask.
+    assert blocks.max(initial=0) < 2**31, "block ids must fit in int32"
+    b32 = blocks.astype(np.int32)
+    s = b32 & np.int32(sets - 1)
+    order = np.argsort(s, kind="stable")
+    counts = np.bincount(s, minlength=sets)
+    max_len = _bucket_len(int(counts.max()))
+    starts = np.zeros(sets, dtype=np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    col = np.arange(len(b32), dtype=np.int64) - np.repeat(starts, counts)
+    row = s[order].astype(np.int64)
+    padded = np.full((max_len, sets), -1, dtype=np.int32)
+    padded[col, row] = b32[order]
+    return padded, order, col, row
+
+
+def _bucket_len(n: int) -> int:
+    """Round the padded substream length up to a power of two (min 128).
+
+    The batched pass is jitted per ``(sets, ways, max_len)`` shape; pow2
+    bucketing caps compile count at O(log N) per geometry instead of one
+    compile per distinct trace length.
+    """
+    return max(128, 1 << (n - 1).bit_length())
+
+
+@lru_cache(maxsize=32)
+def _batched_pass(sets: int, ways: int):
+    """Jitted batched scan: every step advances all ``sets`` machines."""
+
+    def step(carry, b):
+        tags, age, t = carry  # (sets, ways), (sets, ways), scalar
+        hitv = tags == b[:, None]
+        hit = hitv.any(axis=1)
+        way = jnp.where(hit, jnp.argmax(hitv, axis=1), jnp.argmin(age, axis=1))
+        onehot = way[:, None] == jnp.arange(tags.shape[1])[None, :]
+        tags = jnp.where(onehot, b[:, None], tags)
+        age = jnp.where(onehot, t, age)
+        return (tags, age, t + 1), hit
+
+    @jax.jit
+    def run(padded):  # (max_len, sets) -> (max_len, sets) hits
+        init = (
+            jnp.full((sets, ways), -1, dtype=jnp.int32),
+            jnp.zeros((sets, ways), dtype=jnp.int32),
+            jnp.int32(1),
+        )
+        _, hits = jax.lax.scan(step, init, padded, unroll=4)
+        return hits
+
+    return run
+
+
+# Skew guard: the padded matrix costs max_len x sets cells.  Balanced
+# streams stay within ~2x of N (pow2 bucketing), so beyond PAD_FACTOR x N
+# cells (with an absolute floor so tiny streams never trip it) the stream
+# is set-skewed enough that the serial reference's O(N) machine wins —
+# and a fully-degenerate stream (every access in one set at a large-sets
+# geometry) would otherwise demand a max_len x sets allocation far larger
+# than the stream itself.
+_PAD_FACTOR = 4
+_PAD_FLOOR_CELLS = 1 << 22
+
+
+def cache_pass_set_parallel(blocks: np.ndarray, sets: int, ways: int) -> np.ndarray:
+    counts = np.bincount(
+        np.asarray(blocks, dtype=np.int64) & (sets - 1), minlength=sets
+    )
+    cells = _bucket_len(int(counts.max(initial=0))) * sets
+    if cells > max(_PAD_FACTOR * len(blocks), _PAD_FLOOR_CELLS):
+        return scan_cache.cache_pass(blocks, sets, ways)  # bit-identical
+    padded, order, col, row = group_by_set(blocks, sets)
+    hits = np.asarray(_batched_pass(sets, ways)(jnp.asarray(padded)))
+    out = np.zeros(len(blocks), dtype=bool)
+    out[order] = hits[col, row]
+    return out
+
+
+def cache_pass(blocks: np.ndarray, sets: int, ways: int) -> np.ndarray:
+    """Run an access stream through one cache level; returns the hit mask.
+
+    Dispatches to the active engine (see module docstring); every engine
+    honors the same contract and produces bit-identical masks.
+    """
+    if len(blocks) == 0:
+        return np.zeros(0, dtype=bool)
+    assert blocks.max(initial=0) < 2**31, "block ids must fit in int32"
+    engine = current_engine()
+    if engine == "reference":
+        return scan_cache.cache_pass(blocks, sets, ways)
+    if engine == "pallas":
+        from repro.kernels.cache_sim.ops import cache_pass_pallas
+
+        return cache_pass_pallas(blocks, sets, ways)
+    return cache_pass_set_parallel(blocks, sets, ways)
+
+
+__all__ = [
+    "ENGINES",
+    "ENGINE_ENV",
+    "cache_pass",
+    "cache_pass_set_parallel",
+    "current_engine",
+    "group_by_set",
+    "set_engine",
+    "use_engine",
+]

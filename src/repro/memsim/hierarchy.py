@@ -16,7 +16,20 @@ import dataclasses
 import numpy as np
 
 from repro.memsim.config import HierarchyConfig
-from repro.memsim.scan_cache import cache_pass, classify_prefetch_events
+from repro.memsim.engine import cache_pass
+from repro.memsim.scan_cache import classify_prefetch_events
+
+
+def _stage(name: str):
+    """Per-level stage-timer hook (``cache_pass[l1|l2|llc]``).
+
+    Imported lazily: :mod:`repro.core.exec.timers` is dependency-free, but
+    reaching it imports the ``repro.core`` package, which imports this
+    module back — fine at call time, a cycle at import time.
+    """
+    from repro.core.exec.timers import stage
+
+    return stage(name)
 
 
 @dataclasses.dataclass
@@ -68,13 +81,16 @@ class DemandProfile:
 def simulate_demand(
     blocks: np.ndarray, iter_id: np.ndarray, cfg: HierarchyConfig
 ) -> DemandProfile:
-    l1_hit = cache_pass(blocks, cfg.l1.sets, cfg.l1.ways)
+    with _stage("cache_pass[l1]"):
+        l1_hit = cache_pass(blocks, cfg.l1.sets, cfg.l1.ways)
     l2_pos = np.flatnonzero(~l1_hit).astype(np.int64)
     l2_blocks = blocks[l2_pos]
     l2_iter = iter_id[l2_pos]
-    l2_hit = cache_pass(l2_blocks, cfg.l2.sets, cfg.l2.ways)
+    with _stage("cache_pass[l2]"):
+        l2_hit = cache_pass(l2_blocks, cfg.l2.sets, cfg.l2.ways)
     llc_in = l2_blocks[~l2_hit]
-    llc_hit = cache_pass(llc_in, cfg.llc.sets, cfg.llc.ways)
+    with _stage("cache_pass[llc]"):
+        llc_hit = cache_pass(llc_in, cfg.llc.sets, cfg.llc.ways)
     return DemandProfile(
         blocks=blocks,
         iter_id=iter_id,
@@ -170,14 +186,16 @@ def simulate_with_prefetch(
     m_issuer = np.full(total, -1, dtype=np.int8)
     m_issuer[pf_slots] = pf_issuer
 
-    hit = cache_pass(mblocks_s, cfg.l2.sets, cfg.l2.ways)
+    with _stage("cache_pass[l2]"):
+        hit = cache_pass(mblocks_s, cfg.l2.sets, cfg.l2.ways)
     useful, late, redundant, early, fill_origin = classify_prefetch_events(
         mblocks_s, m_is_pf_s, mpos_s, hit, 2 * cfg.pf_fill_window
     )
 
     # LLC sees every L2 miss (demand or prefetch) in order.
     llc_sel = ~hit
-    llc_hit = cache_pass(mblocks_s[llc_sel], cfg.llc.sets, cfg.llc.ways)
+    with _stage("cache_pass[llc]"):
+        llc_hit = cache_pass(mblocks_s[llc_sel], cfg.llc.sets, cfg.llc.ways)
     llc_is_pf = m_is_pf_s[llc_sel]
     llc_pos = mpos_s[llc_sel] // 2
 

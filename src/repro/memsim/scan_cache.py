@@ -1,15 +1,23 @@
-"""Set-associative cache passes as jitted ``lax.scan`` loops.
+"""Reference cache pass: a serial one-access-per-step ``lax.scan``.
+
+This is the *correctness oracle* of the simulator, not its hot path — the
+default production engine is the set-parallel batched pass in
+:mod:`repro.memsim.engine` (4-8x faster on CPU), whose hit masks are
+required to be bit-identical to this one (property-tested, and gated in the
+bench harness).  Select this path explicitly with
+``REPRO_CACHE_ENGINE=reference`` or ``engine.use_engine("reference")``.
 
 Each pass is compiled once per (sets, ways) geometry and reused across all
 traces/prefetchers — the scan carry is the full tag/LRU state, each step is
 one access. True-LRU replacement via a monotone age counter.
 
-Performance note (1-core CPU): the scan emits ONLY the per-access hit bit.
-Emitting any value derived from the gathered set row (way metadata etc.)
-de-optimizes XLA's CPU while-loop by ~40x, so prefetch-classification state
-(pf bits, fill times) is NOT tracked here — it is reconstructed exactly from
-the hit mask by a segmented chain analysis in :mod:`repro.memsim.hierarchy`
-(a hit implies continuous residency since the previous same-block event, so
+Performance note: every engine emits ONLY the per-access hit bit.  Emitting
+values derived from the gathered set row (way metadata etc.) de-optimizes
+XLA's CPU while-loop by ~40x on this serial path and bloats the batched
+engine's carry, so prefetch-classification state (pf bits, fill times) is
+NOT tracked here — it is reconstructed exactly from the hit mask by a
+segmented chain analysis in :func:`classify_prefetch_events` below (a hit
+implies continuous residency since the previous same-block event, so
 per-line state is a function of the block's event chain alone).
 """
 from __future__ import annotations
@@ -50,7 +58,12 @@ def _plain_pass(sets: int, ways: int):
 
 
 def cache_pass(blocks: np.ndarray, sets: int, ways: int) -> np.ndarray:
-    """Run an access stream through one cache level; returns the hit mask."""
+    """Reference hit mask for one cache level (serial per-access scan).
+
+    Prefer :func:`repro.memsim.engine.cache_pass`, which dispatches to the
+    set-parallel engine by default and to this function under the
+    ``reference`` engine.
+    """
     if len(blocks) == 0:
         return np.zeros(0, dtype=bool)
     assert blocks.max(initial=0) < 2**31, "block ids must fit in int32"

@@ -21,6 +21,9 @@ from repro.kernels.basedelta.basedelta import (
 )
 from repro.kernels.basedelta.ops import roundtrip
 from repro.kernels.basedelta.ref import compress_ref, decompress_ref
+from repro.kernels.cache_sim.cache_sim import lru_hits
+from repro.kernels.cache_sim.ops import cache_pass_pallas
+from repro.kernels.cache_sim.ref import lru_hits_ref
 from repro.kernels.flash_attn.ops import mha
 from repro.kernels.flash_attn.ref import attention_ref
 from repro.kernels.ssd_scan.ref import ssd_naive
@@ -157,6 +160,39 @@ def test_basedelta_ragged_roundtrip():
 def test_pack_ragged_rejects_oversized_entries():
     with pytest.raises(AssertionError):
         roundtrip(np.arange(100, dtype=np.int64), np.array([0, 50, 100]))
+
+
+# --------------------------- cache_sim ---------------------------
+
+
+@given(
+    sets=st.sampled_from([2, 8]),
+    ways=st.sampled_from([1, 2, 4]),
+    n=st.integers(1, 200),
+    span=st.integers(1, 60),
+    seed=st.integers(0, 20),
+)
+@settings(max_examples=12, deadline=None)
+def test_cache_sim_kernel_vs_oracle(sets, ways, n, span, seed):
+    from repro.memsim.engine import group_by_set
+
+    rng = np.random.default_rng(seed)
+    blocks = rng.integers(0, span, n).astype(np.int64)
+    padded, _, _, _ = group_by_set(blocks, sets)
+    mat = np.ascontiguousarray(padded.T)  # (sets, L)
+    got = np.asarray(lru_hits(jnp.asarray(mat), ways, set_tile=sets, interpret=True))
+    ref = lru_hits_ref(mat, ways)
+    real = mat >= 0  # oracle skips tail pads; the kernel runs over them
+    np.testing.assert_array_equal(got[real], ref[real])
+
+
+def test_cache_sim_full_stream_matches_reference_engine():
+    from repro.memsim.scan_cache import cache_pass as cache_pass_reference
+
+    rng = np.random.default_rng(5)
+    blocks = rng.integers(0, 700, 2_000).astype(np.int64)
+    out = cache_pass_pallas(blocks, 16, 4, set_tile=4, interpret=True)
+    np.testing.assert_array_equal(out, cache_pass_reference(blocks, 16, 4))
 
 
 # --------------------------- ssd_scan ---------------------------
