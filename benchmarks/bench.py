@@ -1,9 +1,12 @@
 """Perf-trajectory benchmark harness for the experiment execution engine.
 
 Times the pipeline stages (trace generation, demand simulation with
-per-level ``cache_pass[l1|l2|llc]`` breakdown, per-prefetcher scoring) and
+per-level ``cache_pass[l1|l2|llc]`` breakdown, per-prefetcher scoring),
 the end-to-end evaluation grid — serial with a cold workload-artifact
-cache, then at each ``--workers`` count against the warm cache — and emits
+cache, then at each ``--workers`` count against the warm cache — and
+(schema v3) a small 3-epoch evolving-graph stream cell with the
+stream-protocol stage breakdown (``update_apply``, ``trace_epoch``,
+``table_carry``) and its own serial-vs-parallel parity gate, and emits
 a schema-stable ``BENCH_<date>.json`` at the repo root (never clobbering an
 existing file: reruns on the same date get a ``.2``, ``.3``, ... infix so
 the trajectory keeps its before/after points).  The dated JSONs accumulate
@@ -35,7 +38,7 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 # Three prefetchers spanning the suite's families: the paper's contribution
 # (amc), a spatial baseline (vldp), and a replay baseline (rnr).  The
@@ -45,6 +48,11 @@ SCHEMA_VERSION = 2
 PREFETCHERS = ["amc", "vldp", "rnr"]
 GRID_PREFETCHERS = ["amc", "rnr"]
 SMOKE_CELLS = [("pgd", "comdblp", 0)]
+# The streaming-subsystem cell (schema v3): a 3-epoch sliding-window
+# stream, timed for its own stages (update_apply / trace_epoch /
+# table_carry) and parity-gated serial vs workers=2.
+STREAM_EPOCHS = 3
+STREAM_PREFETCHERS = ["amc", "nextline2"]
 # (kernel, dataset, seed) cells on comdblp, both app protocols.  The
 # seed-varied bfs/bellmanford cells are distinct evolving-graph trials
 # (each seed draws a different §VI run1->run2 evolution), and their
@@ -210,6 +218,42 @@ def main(argv=None) -> int:
                     "from serial",
                     file=sys.stderr,
                 )
+
+        # --- streaming subsystem (schema v3): one small multi-epoch
+        # stream cell, with the stream-protocol stage breakdown and a
+        # serial-vs-parallel parity gate of its own.
+        from repro.stream import SlidingWindow, StreamSpec
+
+        stream_spec = StreamSpec(
+            "pgd", "comdblp", SlidingWindow(), epochs=STREAM_EPOCHS
+        )
+        stream_pairs = resolve_prefetchers(STREAM_PREFETCHERS)
+        print(
+            f"[bench] stream: {STREAM_EPOCHS}-epoch sliding-window "
+            f"{stream_spec.kernel}/{stream_spec.dataset} cold"
+        )
+        stream_stages: dict = {}
+        with collect_stages(into=stream_stages):
+            stream_cold_s, stream_result = _grid_seconds(
+                [stream_spec], stream_pairs, cache_dir, 1
+            )
+        stream_rows = stream_result.rows()
+        print(f"[bench] stream serial cold: {stream_cold_s:.1f}s")
+        stream_warm_s, stream_par = _grid_seconds(
+            [stream_spec], stream_pairs, cache_dir, 2
+        )
+        stream_parity = rows_equal(stream_rows, stream_par.rows())
+        parity = parity and stream_parity
+        print(
+            f"[bench] stream workers=2 warm: {stream_warm_s:.1f}s "
+            f"(parity {'ok' if stream_parity else 'FAILED'})"
+        )
+        if not stream_parity:
+            print(
+                "[bench] PARITY FAILURE: stream workers=2 results diverge "
+                "from serial",
+                file=sys.stderr,
+            )
     finally:
         if own_cache_dir:
             shutil.rmtree(cache_dir, ignore_errors=True)
@@ -239,6 +283,25 @@ def main(argv=None) -> int:
         "wallclock_s": {"serial_cold": serial_cold_s, "warm_by_workers": warm},
         "speedup_vs_serial_cold": {
             w: serial_cold_s / s for w, s in warm.items() if s > 0
+        },
+        # Schema v3: the streaming-subsystem cell (3-epoch sliding-window
+        # stream) with the stream-protocol stage timers.
+        "stream": {
+            "kernel": stream_spec.kernel,
+            "dataset": stream_spec.dataset,
+            "epochs": STREAM_EPOCHS,
+            "churn": "sliding_window",
+            "prefetchers": STREAM_PREFETCHERS,
+            "stages_s": {
+                "update_apply": stream_stages.get("update_apply", 0.0),
+                "trace_epoch": stream_stages.get("trace_epoch", 0.0),
+                "table_carry": stream_stages.get("table_carry", 0.0),
+            },
+            "wallclock_s": {
+                "serial_cold": stream_cold_s,
+                "warm_workers2": stream_warm_s,
+            },
+            "parallel_matches_serial": stream_parity,
         },
         "parallel_matches_serial": parity,
         "engine_matches_reference": engine_ok,

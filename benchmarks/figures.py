@@ -17,14 +17,93 @@ PF_ORDER = ["amc", "vldp", "bingo", "isb", "misb", "rnr", "ideal"]
 
 
 def load(results_dir: str = "results"):
+    """Per-workload sweep JSONs, keyed by (kernel, dataset).
+
+    The results directory also accumulates stream-protocol drift artifacts
+    (``schema: "stream-drift"``, consumed by :func:`fig_drift`) and may
+    hold future schemas; anything that is not a per-workload sweep
+    document is skipped instead of KeyError-ing downstream.
+    """
     out = {}
     for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
         if os.path.basename(f).startswith(("roofline", "perf")):
             continue
-        r = json.load(open(f))
-        if "kernel" in r:
-            out[(r["kernel"], r["dataset"])] = r
+        try:
+            r = json.load(open(f))
+        except (OSError, json.JSONDecodeError):
+            continue  # truncated/corrupt file: not this module's problem
+        if not isinstance(r, dict) or r.get("schema") == "stream-drift":
+            continue  # stream artifact (fig_drift territory) or non-document
+        if "kernel" not in r or not isinstance(r.get("prefetchers"), dict):
+            continue  # not a per-workload sweep document
+        out[(r["kernel"], r["dataset"])] = r
     return out
+
+
+def load_streams(results_dir: str = "results"):
+    """Stream-drift JSONs (repro.stream.protocol.drift_payload documents),
+    keyed by (kernel, dataset, churn kind, lifecycle)."""
+    out = {}
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        try:
+            r = json.load(open(f))
+        except (OSError, json.JSONDecodeError):
+            continue
+        if not isinstance(r, dict) or r.get("schema") != "stream-drift":
+            continue
+        key = (
+            r["kernel"],
+            r["dataset"],
+            r.get("churn", {}).get("kind", "?"),
+            r.get("lifecycle", "?"),
+        )
+        out[key] = r
+    return out
+
+
+def fig_drift(streams):
+    """Per-epoch accuracy/coverage drift curves per prefetcher (stream
+    protocol) — the evolving-graph scenario engine's headline figure."""
+    headers = [
+        "stream",
+        "prefetcher",
+        "lifecycle",
+        "coverage_by_epoch",
+        "accuracy_by_epoch",
+        "tail_mean_coverage",
+        "tail_mean_accuracy",
+        "cumulative_overlap",
+    ]
+    rows = []
+    derived = {}
+    for (k, d, churn, lifecycle), r in sorted(streams.items()):
+        overlap = [round(v, 3) for v in r["overlap"]["cumulative_overlap"]]
+        for pf, doc in sorted(r["prefetchers"].items()):
+            s = doc["summary"]
+            rows.append(
+                [
+                    f"{k}/{d}[{churn}]",
+                    pf,
+                    doc.get("lifecycle") or "-",
+                    [round(v, 3) for v in s["coverage"]],
+                    [round(v, 3) for v in s["accuracy"]],
+                    round(s["tail_mean_coverage"], 3),
+                    round(s["tail_mean_accuracy"], 3),
+                    overlap,
+                ]
+            )
+            if doc.get("lifecycle"):
+                derived[
+                    f"tail_mean_coverage/{k}/{d}/{churn}/{pf}[{doc['lifecycle']}]"
+                ] = s["tail_mean_coverage"]
+    # The headline comparison: does carrying the tables beat cold tables?
+    persist = [v for key, v in derived.items() if key.endswith("[persist]")]
+    reset = [v for key, v in derived.items() if key.endswith("[reset]")]
+    if persist and reset:
+        derived["persist_minus_reset_tail_coverage"] = float(
+            np.mean(persist) - np.mean(reset)
+        )
+    return headers, rows, derived
 
 
 def _geomean(xs):

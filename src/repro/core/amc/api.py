@@ -47,6 +47,7 @@ class AMCSession:
         self.regs = _ArchRegisters()
         self.active = False
         self.iteration = 0
+        self.graph_version = 0
         self._ended = False
 
     # --- Table V calls ---
@@ -57,6 +58,7 @@ class AMCSession:
         self.active = True
         self._ended = False
         self.iteration = 0
+        self.graph_version = 0
 
     def addr_t_base(self, addr: int, size: int, elem_size: int = 8) -> None:
         assert self.active, "AMC.init() first"
@@ -103,6 +105,23 @@ class AMCSession:
         self.regs.target_access_count = 0
         self.regs.miss_count = 0
         self.iteration += 1
+
+    def new_graph_version(self) -> int:
+        """Epoch boundary of an *evolving stream*: the software announces
+        that the input graph advanced to its next version (a batch of edge
+        updates was applied).
+
+        Distinct from :meth:`update` — the iteration boundary within one
+        graph version.  Correlation metadata survives the boundary per the
+        host's table lifecycle policy (``repro.stream.lifecycle``); the
+        declared TARGET/frontier ranges must remain valid, which the
+        stream protocol guarantees by laying out all epochs in one shared
+        address space (``repro.stream.protocol``).  Returns the new
+        version number.
+        """
+        assert self.active, "AMC.init() first"
+        self.graph_version += 1
+        return self.graph_version
 
     def end(self) -> None:
         """Free AMC storage, reset registers, invalidate AMC Cache."""

@@ -32,7 +32,12 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.amc.compression import CompressionStats, select_modes
-from repro.core.amc.storage import AMCEntryTable, AMCStorage, INDEX_ENTRY_BYTES
+from repro.core.amc.storage import (
+    AMCEntryTable,
+    AMCStorage,
+    INDEX_ENTRY_BYTES,
+    intra_rank as _intra_rank,
+)
 from repro.core.registry import register_prefetcher
 
 
@@ -191,10 +196,22 @@ class AMCPrefetcher:
 
     # ---------------- workload driver entry ----------------
 
-    def generate(self, workload) -> PrefetchStream:
-        """workload: repro.core.driver.WorkloadTrace."""
+    def generate(
+        self, workload, storage: Optional[AMCStorage] = None
+    ) -> PrefetchStream:
+        """workload: repro.core.driver.WorkloadTrace.
+
+        ``storage`` lets a caller carry the correlation tables across
+        workloads (the cross-epoch lifecycle of ``repro.stream.lifecycle``);
+        by default a fresh store is allocated, exactly as before.  Metadata
+        traffic on the returned stream covers *this call only* (counter
+        deltas), so per-epoch accounting stays correct with carried state.
+        """
         cfg = self.config
-        storage = AMCStorage(int(cfg.storage_fraction * workload.input_bytes))
+        if storage is None:
+            storage = AMCStorage(int(cfg.storage_fraction * workload.input_bytes))
+        read0, write0 = storage.read_bytes, storage.write_bytes
+        dropped0 = storage.dropped_entries
         stats = CompressionStats()
         views = workload.amc_iteration_views()
         out_blocks: List[np.ndarray] = []
@@ -215,20 +232,22 @@ class AMCPrefetcher:
             np.concatenate(out_blocks) if out_blocks else np.zeros(0, np.int64)
         )
         pos = np.concatenate(out_pos) if out_pos else np.zeros(0, np.int64)
+        read_delta = storage.read_bytes - read0
+        write_delta = storage.write_bytes - write0
         return PrefetchStream(
             name=cfg.name,
             blocks=blocks,
             pos=pos,
-            metadata_bytes=storage.read_bytes + storage.write_bytes,
+            metadata_bytes=read_delta + write_delta,
             info=dict(
                 compression_ratio=stats.ratio,
                 mode_counts=stats.mode_counts,
                 entries=stats.entries,
-                storage_peak_bytes=storage.peak_bytes,
+                storage_peak_bytes=storage.peak_bytes,  # high-water (whole carry)
                 storage_cap_bytes=storage.capacity_bytes,
-                dropped_entries=storage.dropped_entries,
-                metadata_read_bytes=storage.read_bytes,
-                metadata_write_bytes=storage.write_bytes,
+                dropped_entries=storage.dropped_entries - dropped0,
+                metadata_read_bytes=read_delta,
+                metadata_write_bytes=write_delta,
             ),
         )
 
@@ -244,16 +263,6 @@ class AMCPrefetcher:
 def amc(**overrides):
     """Factory: AMC stream generator with :class:`AMCConfig` overrides."""
     return AMCPrefetcher(AMCConfig(**overrides)).generate
-
-
-def _intra_rank(counts: np.ndarray) -> np.ndarray:
-    """[0..c0), [0..c1), ... concatenated."""
-    total = int(counts.sum())
-    if total == 0:
-        return np.zeros(0, dtype=np.int64)
-    starts = np.zeros(len(counts), dtype=np.int64)
-    np.cumsum(counts[:-1], out=starts[1:])
-    return np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
 
 
 def _segment_cumsum(values: np.ndarray, seg: np.ndarray) -> np.ndarray:

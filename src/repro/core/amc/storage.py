@@ -22,6 +22,16 @@ import numpy as np
 INDEX_ENTRY_BYTES = 2 * 3 + 1 + 4 + 1  # = 12
 
 
+def intra_rank(counts: np.ndarray) -> np.ndarray:
+    """[0..c0), [0..c1), ... concatenated (ragged-expansion helper)."""
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    starts = np.zeros(len(counts), dtype=np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    return np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
+
+
 @dataclasses.dataclass
 class AMCEntryTable:
     """One recorded iteration's correlation entries (struct of ragged arrays)."""
@@ -35,6 +45,28 @@ class AMCEntryTable:
     miss_offsets: np.ndarray  # (E+1,) ragged offsets into miss_blocks
     miss_blocks: np.ndarray  # concatenated miss block ids
     truncated: bool = False  # storage cap hit while recording
+    age: int = 0  # epochs since recorded (cross-epoch lifecycle only)
+
+    def subset(self, keep: np.ndarray) -> "AMCEntryTable":
+        """A new table holding only the entries selected by ``keep``
+        (boolean mask over entries), ragged miss streams re-packed."""
+        keep_idx = np.flatnonzero(keep)
+        nm = self.nmiss[keep_idx].astype(np.int64)
+        gather = np.repeat(self.miss_offsets[keep_idx], nm) + intra_rank(nm)
+        offsets = np.zeros(len(keep_idx) + 1, dtype=np.int64)
+        np.cumsum(nm, out=offsets[1:])
+        return AMCEntryTable(
+            iteration=self.iteration,
+            trigger_vid=self.trigger_vid[keep_idx],
+            prev_vid=self.prev_vid[keep_idx],
+            mode=self.mode[keep_idx],
+            nmiss=self.nmiss[keep_idx],
+            bits=self.bits[keep_idx],
+            miss_offsets=offsets,
+            miss_blocks=self.miss_blocks[gather],
+            truncated=self.truncated,
+            age=self.age,
+        )
 
     @property
     def num_entries(self) -> int:
@@ -64,6 +96,12 @@ class AMCStorage:
         self.read_bytes = 0  # off-chip metadata reads (prefetch phase)
         self.dropped_entries = 0
         self.peak_bytes = 0
+        # Cross-epoch lifecycle accounting (repro.stream.lifecycle):
+        self.lookup_hits = 0  # lookups that found a table
+        self.lookup_misses = 0  # lookups with no table for the iteration
+        self.stale_hits = 0  # hits on tables older than one epoch (age > 0)
+        self.invalidated_entries = 0  # dropped by invalidate_triggers()
+        self.aged_out_tables = 0  # dropped by swap_retaining() age cap
 
     def record_bytes_used(self) -> int:
         return sum(t.total_bytes for t in self.recording.values())
@@ -101,7 +139,14 @@ class AMCStorage:
         return sum(t.total_bytes for t in self.prefetching.values())
 
     def lookup(self, iteration: int) -> Optional[AMCEntryTable]:
-        return self.prefetching.get(iteration)
+        table = self.prefetching.get(iteration)
+        if table is None:
+            self.lookup_misses += 1
+        else:
+            self.lookup_hits += 1
+            if table.age > 0:
+                self.stale_hits += 1
+        return table
 
     def charge_read(self, nbytes: int):
         self.read_bytes += int(nbytes)
@@ -111,6 +156,46 @@ class AMCStorage:
         space; the old prefetch space is invalidated and recycled."""
         self.prefetching = self.recording
         self.recording = {}
+
+    def swap_retaining(self, max_age: int):
+        """Epoch-boundary swap that *retains* old tables as aged fallbacks.
+
+        The ``age`` lifecycle policy: iterations re-recorded this epoch get
+        their fresh table; iterations the new epoch did not reach keep the
+        previous table with its age incremented, up to ``max_age`` epochs —
+        LRU-style aging instead of the hard invalidation of :meth:`swap`.
+        """
+        old = self.prefetching
+        fresh = dict(self.recording)
+        for it, table in old.items():
+            if it in fresh:
+                continue
+            if table.age + 1 > max_age:
+                self.aged_out_tables += 1
+                continue
+            table.age += 1
+            fresh[it] = table
+        self.prefetching = fresh
+        self.recording = {}
+
+    def invalidate_triggers(self, changed_vids: np.ndarray) -> int:
+        """Drop prefetch-space entries whose trigger vertex is in
+        ``changed_vids`` (sorted unique ids) — the ``invalidate_changed``
+        policy: a changed vertex's recorded miss stream describes a
+        neighborhood that no longer exists.  Returns entries dropped."""
+        dropped = 0
+        changed = np.asarray(changed_vids, dtype=np.int64)
+        for it, table in list(self.prefetching.items()):
+            if table.num_entries == 0:
+                continue
+            stale = np.isin(table.trigger_vid, changed)
+            n_stale = int(stale.sum())
+            if n_stale == 0:
+                continue
+            dropped += n_stale
+            self.prefetching[it] = table.subset(~stale)
+        self.invalidated_entries += dropped
+        return dropped
 
     def tables(self) -> List[AMCEntryTable]:
         return list(self.prefetching.values()) + list(self.recording.values())

@@ -266,16 +266,33 @@ def make_session(spec: WorkloadSpec, cfg_trace: TraceConfig) -> AMCSession:
     return sess
 
 
-def _build_workload(spec: WorkloadSpec, runs: Optional[List[AppRun]]) -> WorkloadTrace:
+def _build_workload(
+    spec: WorkloadSpec,
+    runs: Optional[List[AppRun]],
+    cfg_trace: Optional[TraceConfig] = None,
+    epoch_mode: Optional[str] = None,
+) -> WorkloadTrace:
+    """Build the trace for ``spec``.
+
+    ``cfg_trace`` overrides the address layout — the streaming protocol
+    (``repro.stream.protocol``) lays every epoch of a stream out in one
+    shared space so cross-epoch correlations stay valid.  ``epoch_mode``
+    selects the AMC-epoch structure: ``None`` keeps the per-kernel paper
+    protocol (PGD/CC: one epoch per iteration; BFS/BF: one per run);
+    ``"single"`` puts the whole trace in one epoch with the iteration index
+    as the within-epoch key — one *stream epoch*, replayed against the
+    previous epoch's recordings by the table lifecycle.
+    """
     kernel, dataset, hierarchy = spec.kernel, spec.dataset, spec.hierarchy
     with stage("trace_gen"):
         runs = runs if runs is not None else _run_app(kernel, dataset, spec.seed)
-        # Shared address layout across runs (same id space - evolve.py keeps it).
-        g = runs[0].graph
-        cfg_trace = TraceConfig(
-            num_vertices=g.num_vertices,
-            num_edges=max(r.graph.num_edges for r in runs),
-        )
+        if cfg_trace is None:
+            # Shared layout across runs (same id space - evolve.py keeps it).
+            g = runs[0].graph
+            cfg_trace = TraceConfig(
+                num_vertices=g.num_vertices,
+                num_edges=max(r.graph.num_edges for r in runs),
+            )
 
         all_traces = []
         iter_epochs: List[Tuple[int, int]] = []
@@ -286,7 +303,9 @@ def _build_workload(spec: WorkloadSpec, runs: Optional[List[AppRun]]) -> Workloa
             run_start_iter.append(git)
             for k, t in enumerate(traces):
                 t.iteration = git  # globalize
-                if kernel in TWO_RUN_KERNELS:
+                if epoch_mode == "single":
+                    iter_epochs.append((0, git))
+                elif kernel in TWO_RUN_KERNELS:
                     iter_epochs.append((run_idx, k))
                 else:
                     iter_epochs.append((git, 0))

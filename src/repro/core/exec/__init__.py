@@ -25,6 +25,7 @@ __all__ = [
     "ArtifactCache",
     "collect_stages",
     "default_cache_dir",
+    "materialize_specs",
     "rows_equal",
     "run_grid",
     "stage",
@@ -38,7 +39,7 @@ def __getattr__(name):
         from repro.core.exec import artifacts
 
         return getattr(artifacts, name)
-    if name in ("run_grid", "rows_equal"):
+    if name in ("materialize_specs", "run_grid", "rows_equal"):
         from repro.core.exec import scheduler
 
         return getattr(scheduler, name)

@@ -87,17 +87,32 @@ class ArtifactCache:
         self.misses = 0
 
     def key(self, spec: WorkloadSpec) -> str:
-        """Canonical identity document hashed into the artifact filename."""
+        """Canonical identity document hashed into the artifact filename.
+
+        Any frozen spec dataclass with the ``WorkloadSpec`` field surface
+        works (the stream protocol's ``StreamEpochSpec`` ships extra
+        fields — churn model, epoch index — which land in the hash).  For
+        non-``WorkloadSpec`` types the class names are folded in too, so
+        two spec types can never collide on identical field dicts, while
+        plain ``WorkloadSpec`` keys stay byte-stable across this change.
+        """
         doc = {
             "artifact_schema": ARTIFACT_SCHEMA,
             "trace_code_version": _driver.TRACE_CODE_VERSION,
             "spec": dataclasses.asdict(spec),
         }
+        if type(spec) is not WorkloadSpec:
+            doc["spec_type"] = type(spec).__name__
+            churn = getattr(spec, "churn", None)
+            if churn is not None:
+                doc["churn_kind"] = type(churn).__name__
         return json.dumps(doc, sort_keys=True)
 
     def path_for(self, spec: WorkloadSpec) -> Path:
         digest = hashlib.sha256(self.key(spec).encode()).hexdigest()[:20]
-        name = f"{spec.kernel}_{spec.dataset}_s{spec.seed}_{digest}.npz"
+        epoch = getattr(spec, "epoch", None)
+        tag = f"_e{epoch}" if epoch is not None else ""
+        name = f"{spec.kernel}_{spec.dataset}_s{spec.seed}{tag}_{digest}.npz"
         return self.root / name
 
     def has(self, spec: WorkloadSpec) -> bool:

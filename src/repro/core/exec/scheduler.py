@@ -24,11 +24,12 @@ child.  Spawned workers re-import the package, so the parent exports the
 
 from __future__ import annotations
 
+import contextlib
 import os
 import pickle
 from concurrent.futures import ProcessPoolExecutor, as_completed
 from multiprocessing import get_context
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -161,6 +162,62 @@ def rows_equal(a: List[dict], b: List[dict]) -> bool:
     return True
 
 
+@contextlib.contextmanager
+def _spawn_pool(
+    artifacts: ArtifactCache, n_tasks: int, workers: int
+) -> Iterator[ProcessPoolExecutor]:
+    """A spawned process pool with the engine's worker environment.
+
+    Spawned interpreters re-import the package from scratch, so the parent
+    exports: the ``repro`` source root on ``PYTHONPATH``; a persistent JAX
+    compilation cache next to the workload artifacts (re-JITting the
+    lax.scan cache passes costs seconds per process otherwise — an
+    externally-set cache dir wins so a parent that set one shares its
+    compiles); and the current cache-engine selection, which may live in
+    process-local state the children would never see.  The environment is
+    restored when the pool closes.
+    """
+    # repro may be a namespace package (no __init__), so resolve its
+    # directory via __path__ when __file__ is absent.
+    if getattr(repro, "__file__", None):
+        pkg_dir = os.path.dirname(os.path.abspath(repro.__file__))
+    else:
+        pkg_dir = os.path.abspath(next(iter(repro.__path__)))
+    src_root = os.path.dirname(pkg_dir)
+    old_pythonpath = os.environ.get("PYTHONPATH")
+    pythonpath = [src_root] + ([old_pythonpath] if old_pythonpath else [])
+    jax_cache = os.environ.get(
+        "JAX_COMPILATION_CACHE_DIR", str(artifacts.root / "jax-cache")
+    )
+    from repro.memsim.engine import ENGINE_ENV, current_engine
+
+    child_env = {
+        "PYTHONPATH": os.pathsep.join(pythonpath),
+        "JAX_COMPILATION_CACHE_DIR": jax_cache,
+        # Cache even sub-second compiles (the default threshold is 1s).
+        "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": os.environ.get(
+            "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0"
+        ),
+        ENGINE_ENV: current_engine(),
+    }
+    saved_env = {k: os.environ.get(k) for k in child_env}
+    os.environ.update(child_env)
+    # ``workers`` is the requested shard width; the actual pool never
+    # exceeds the task count or the core count — extra spawned processes
+    # on a saturated host only add import/contention overhead.
+    pool_size = max(1, min(workers, n_tasks, os.cpu_count() or workers))
+    try:
+        ctx = get_context("spawn")
+        with ProcessPoolExecutor(max_workers=pool_size, mp_context=ctx) as pool:
+            yield pool
+    finally:
+        for key, value in saved_env.items():
+            if value is None:
+                os.environ.pop(key, None)
+            else:
+                os.environ[key] = value
+
+
 def run_grid(
     specs: Sequence[WorkloadSpec],
     prefetchers: Sequence[Tuple[str, object]],
@@ -196,68 +253,22 @@ def run_grid(
 
     traces: Dict[WorkloadSpec, WorkloadTrace] = {}
     metrics: Dict[tuple, PrefetchMetrics] = {}
-    # repro may be a namespace package (no __init__), so resolve its
-    # directory via __path__ when __file__ is absent.
-    if getattr(repro, "__file__", None):
-        pkg_dir = os.path.dirname(os.path.abspath(repro.__file__))
-    else:
-        pkg_dir = os.path.abspath(next(iter(repro.__path__)))
-    src_root = os.path.dirname(pkg_dir)
-    old_pythonpath = os.environ.get("PYTHONPATH")
-    pythonpath = [src_root] + ([old_pythonpath] if old_pythonpath else [])
-    # Each spawned worker would otherwise re-JIT the lax.scan cache passes
-    # (seconds per process); a persistent compilation cache next to the
-    # workload artifacts makes that a one-time cost per geometry.  An
-    # externally-set cache dir wins, so a parent process that set one
-    # before importing JAX shares its compiles with every worker.
-    jax_cache = os.environ.get(
-        "JAX_COMPILATION_CACHE_DIR", str(artifacts.root / "jax-cache")
-    )
-    from repro.memsim.engine import ENGINE_ENV, current_engine
-
-    child_env = {
-        # Spawned interpreters re-import the package from scratch.
-        "PYTHONPATH": os.pathsep.join(pythonpath),
-        "JAX_COMPILATION_CACHE_DIR": jax_cache,
-        # Cache even sub-second compiles (the default threshold is 1s).
-        "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": os.environ.get(
-            "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0"
-        ),
-        # A set_engine()/use_engine() override is process-local state the
-        # spawned interpreters would never see; export it so workers
-        # simulate on the same cache engine as the parent.
-        ENGINE_ENV: current_engine(),
-    }
-    saved_env = {k: os.environ.get(k) for k in child_env}
-    os.environ.update(child_env)
-    # ``workers`` is the requested shard width; the actual pool never
-    # exceeds the task count or the core count — extra spawned processes
-    # on a saturated host only add import/contention overhead.
-    pool_size = max(1, min(workers, len(tasks), os.cpu_count() or workers))
-    try:
-        ctx = get_context("spawn")
-        with ProcessPoolExecutor(max_workers=pool_size, mp_context=ctx) as pool:
-            futures = {
-                pool.submit(_run_task, (i, spec, chunk, str(artifacts.root))): i
-                for i, (spec, chunk) in enumerate(tasks)
-            }
-            for fut in as_completed(futures):
-                index, scored = fut.result()
-                spec = tasks[index][0]
-                for name, m in scored:
-                    metrics[(spec, name)] = m
-                    if verbose:
-                        print(
-                            f"[{spec.kernel}/{spec.dataset}] {name}: "
-                            f"speedup {m.speedup:.2f} coverage {m.coverage:.2f} "
-                            f"accuracy {m.accuracy:.2f}"
-                        )
-    finally:
-        for key, value in saved_env.items():
-            if value is None:
-                os.environ.pop(key, None)
-            else:
-                os.environ[key] = value
+    with _spawn_pool(artifacts, len(tasks), workers) as pool:
+        futures = {
+            pool.submit(_run_task, (i, spec, chunk, str(artifacts.root))): i
+            for i, (spec, chunk) in enumerate(tasks)
+        }
+        for fut in as_completed(futures):
+            index, scored = fut.result()
+            spec = tasks[index][0]
+            for name, m in scored:
+                metrics[(spec, name)] = m
+                if verbose:
+                    print(
+                        f"[{spec.kernel}/{spec.dataset}] {name}: "
+                        f"speedup {m.speedup:.2f} coverage {m.coverage:.2f} "
+                        f"accuracy {m.accuracy:.2f}"
+                    )
 
     # Workers persisted their traces in the artifact store; the caller
     # loads them from there on demand (``traces`` stays empty unless a
@@ -265,4 +276,40 @@ def run_grid(
     return metrics, traces
 
 
-__all__ = ["rows_equal", "run_grid"]
+def _materialize_task(task) -> int:
+    """Worker body: build-or-load one trace into the artifact store."""
+    index, spec, cache_root = task
+    _materialize(spec, cache_root)
+    return index
+
+
+def materialize_specs(
+    specs: Sequence[WorkloadSpec],
+    *,
+    workers: int,
+    artifacts: Optional[ArtifactCache] = None,
+) -> int:
+    """Fan workload builds (no scoring) across a spawned pool.
+
+    The build-only counterpart of :func:`run_grid`, used by the streaming
+    protocol: epochs of one stream are independent *builds* (each is its
+    own task here, so E epochs spread across the pool) but must be
+    *scored* sequentially in the parent, where the cross-epoch table
+    lifecycle lives.  Already-materialized specs are skipped.  Returns the
+    number of traces built.
+    """
+    artifacts = artifacts if artifacts is not None else ArtifactCache()
+    todo = [s for s in dict.fromkeys(specs) if not artifacts.has(s)]
+    if not todo:
+        return 0
+    with _spawn_pool(artifacts, len(todo), workers) as pool:
+        futures = [
+            pool.submit(_materialize_task, (i, spec, str(artifacts.root)))
+            for i, spec in enumerate(todo)
+        ]
+        for fut in as_completed(futures):
+            fut.result()
+    return len(todo)
+
+
+__all__ = ["materialize_specs", "rows_equal", "run_grid"]

@@ -158,7 +158,13 @@ class _LazyWorkloads(Mapping):
 
 @dataclasses.dataclass(frozen=True)
 class CellResult:
-    """One grid cell: a prefetcher scored on one workload."""
+    """One grid cell: a prefetcher scored on one workload.
+
+    Stream cells (from a :class:`repro.stream.protocol.StreamSpec`
+    workload) additionally carry the epoch index and, for lifecycle-aware
+    prefetchers, the table-lifecycle policy; both stay ``None`` for plain
+    workload cells so the legacy row schema is unchanged.
+    """
 
     kernel: str
     dataset: str
@@ -166,6 +172,8 @@ class CellResult:
     seed: int
     metrics: PrefetchMetrics
     spec: Optional[WorkloadSpec] = None  # full workload identity
+    epoch: Optional[int] = None  # stream cells only
+    lifecycle: Optional[str] = None  # stream cells with carried tables
 
 
 @dataclasses.dataclass
@@ -216,17 +224,25 @@ class ExperimentResult:
         return out
 
     def rows(self) -> List[dict]:
-        """Tidy per-cell rows: grid coordinates + flattened metrics."""
-        return [
-            dict(
+        """Tidy per-cell rows: grid coordinates + flattened metrics.
+
+        Stream cells gain ``epoch`` (and ``lifecycle``) columns; plain
+        cells keep the exact legacy schema.
+        """
+        out = []
+        for c in self.cells:
+            row = dict(
                 kernel=c.kernel,
                 dataset=c.dataset,
                 prefetcher=c.prefetcher,
                 seed=c.seed,
-                **c.metrics.row(),
             )
-            for c in self.cells
-        ]
+            if c.epoch is not None:
+                row["epoch"] = c.epoch
+                row["lifecycle"] = c.lifecycle
+            row.update(c.metrics.row())
+            out.append(row)
+        return out
 
     def workload(self, kernel: str, dataset: str, seed: int = 0) -> WorkloadTrace:
         """The unique built trace for (kernel, dataset, seed); with several
@@ -272,8 +288,18 @@ class Experiment:
                     "hierarchy=/seeds= apply to the kernels=+datasets= grid; "
                     "with workloads=, declare them on each WorkloadSpec"
                 )
-            self.workload_specs = list(workloads)
+            # Multi-epoch stream scenarios (repro.stream.protocol.StreamSpec)
+            # mix freely with plain workloads; they expand into per-epoch
+            # workload specs at run time and score through the stream
+            # protocol (duck-typed so the protocol module loads lazily).
+            self.stream_specs = [
+                w for w in workloads if getattr(w, "is_stream", False)
+            ]
+            self.workload_specs = [
+                w for w in workloads if not getattr(w, "is_stream", False)
+            ]
         else:
+            self.stream_specs = []
             if not kernels or not datasets:
                 raise ValueError("kernels= and datasets= must both be non-empty")
             self.workload_specs = [
@@ -283,7 +309,7 @@ class Experiment:
                 for s in seeds
             ]
         # Fail fast on typo'd names at declaration time, not first build.
-        for spec in self.workload_specs:
+        for spec in self.workload_specs + self.stream_specs:
             spec.validate_names()
         self.prefetchers: List[Tuple[str, Prefetcher]] = resolve_prefetchers(
             prefetchers
@@ -314,9 +340,22 @@ class Experiment:
         in the workload artifact cache.  Cell ordering and every metric
         are bit-identical to the serial path.  Serial (the default) stays
         the reference implementation.
+
+        Stream workloads expand into per-epoch traces (built/cached like
+        any workload — under ``workers=N`` the epochs of every stream are
+        materialized across the pool) and are then scored *in the parent*
+        by the stream protocol, whose cross-epoch table lifecycle is
+        inherently sequential; stream results are therefore byte-identical
+        between serial and parallel runs too.
         """
         if workers is not None and workers > 1:
-            return self._run_parallel(workers, verbose)
+            if self.workload_specs:
+                result = self._run_parallel(workers, verbose)
+            else:  # stream-only grid: no cells to shard, only epoch builds
+                result = ExperimentResult(cells=[], workloads={})
+            if self.stream_specs:
+                self._append_stream_cells(result, verbose, workers=workers)
+            return result
         cells: List[CellResult] = []
         traces: Dict[WorkloadSpec, WorkloadTrace] = {}
         for spec in self.workload_specs:
@@ -340,7 +379,61 @@ class Experiment:
                         f"speedup {m.speedup:.2f} coverage {m.coverage:.2f} "
                         f"accuracy {m.accuracy:.2f}"
                     )
-        return ExperimentResult(cells=cells, workloads=traces)
+        result = ExperimentResult(cells=cells, workloads=traces)
+        if self.stream_specs:
+            self._append_stream_cells(result, verbose, workers=None)
+        return result
+
+    def _append_stream_cells(
+        self, result: ExperimentResult, verbose: bool, workers: Optional[int]
+    ) -> None:
+        """Score every stream scenario and fold its per-epoch cells in."""
+        from repro.stream import protocol  # lazy: the protocol imports us
+
+        epoch_specs = {
+            es: None for spec in self.stream_specs for es in spec.epoch_specs()
+        }
+        if workers is not None and workers > 1:
+            # Epochs are independent *builds*: materialize them across the
+            # pool, then walk the lifecycle sequentially in the parent.
+            from repro.core.exec import scheduler
+
+            if self.cache.artifacts is None:
+                self.cache.artifacts = ArtifactCache()
+            scheduler.materialize_specs(
+                list(epoch_specs), workers=workers, artifacts=self.cache.artifacts
+            )
+        for spec in self.stream_specs:
+            traces = [self.cache.get_or_build(es) for es in spec.epoch_specs()]
+            for cell in protocol.score_stream(spec, self.prefetchers, traces):
+                result.cells.append(
+                    CellResult(
+                        kernel=spec.kernel,
+                        dataset=spec.dataset,
+                        prefetcher=cell.prefetcher,
+                        seed=spec.seed,
+                        metrics=cell.metrics,
+                        spec=cell.spec,
+                        epoch=cell.epoch,
+                        lifecycle=cell.lifecycle,
+                    )
+                )
+                if verbose:
+                    m = cell.metrics
+                    print(
+                        f"[{spec.kernel}/{spec.dataset}@e{cell.epoch}] "
+                        f"{cell.prefetcher}: speedup {m.speedup:.2f} "
+                        f"coverage {m.coverage:.2f} accuracy {m.accuracy:.2f}"
+                    )
+        if isinstance(result.workloads, dict):
+            for spec in self.stream_specs:
+                for es in spec.epoch_specs():
+                    result.workloads[es] = self.cache.get_or_build(es)
+        else:
+            result.workloads = _LazyWorkloads(
+                self.cache.get_or_build,
+                list(result.workloads) + list(epoch_specs),
+            )
 
     def _run_parallel(self, workers: int, verbose: bool) -> ExperimentResult:
         from repro.core.exec import scheduler  # lazy: avoids import cycle

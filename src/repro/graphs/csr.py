@@ -125,6 +125,23 @@ def build_csr(edges: np.ndarray, num_vertices: int, **kw) -> CSRGraph:
     return from_edges(edges[:, 0], edges[:, 1], num_vertices, **kw)
 
 
+def induced_subgraph(g: CSRGraph, keep_mask: np.ndarray, name: str) -> CSRGraph:
+    """Induced subgraph on ``keep_mask`` vertices, original id space.
+
+    Vertex ids are PRESERVED (vertices are masked, not compacted): the
+    property/target arrays stay indexed by original vertex id across graph
+    versions, which is what keeps access-to-miss correlations recorded on
+    one version partially valid on the next — the effect AMC exploits.
+    """
+    src = g.edge_sources()
+    dst = g.neighbors
+    e_keep = keep_mask[src] & keep_mask[dst]
+    w = g.weights[e_keep] if g.weights is not None else None
+    return from_edges(
+        src[e_keep], dst[e_keep], g.num_vertices, weights=w, dedup=False, name=name
+    )
+
+
 def symmetrize(g: CSRGraph) -> CSRGraph:
     """Return the undirected version of ``g`` (both edge directions)."""
     src = g.edge_sources()

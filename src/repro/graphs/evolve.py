@@ -8,8 +8,17 @@ vertices from the original input are added."
 Vertex ids are PRESERVED across the two runs (the property/target arrays are
 indexed by original vertex id), which is what makes the access-to-miss
 correlations recorded on run-1 partially valid on run-2 — the effect AMC
-exploits. ``induced_subgraph`` therefore keeps the original id space and
-masks vertices instead of compacting ids.
+exploits.  ``induced_subgraph`` (now hosted in :mod:`repro.graphs.csr`)
+therefore keeps the original id space and masks vertices instead of
+compacting ids.
+
+The two-run protocol is the E=2 special case of the multi-epoch streaming
+subsystem: :func:`make_evolving_pair` delegates to
+``repro.stream.snapshots.snapshot_sequence`` with the §VI
+``UniformChurn(init_frac=0.8, del_frac=0.10, add_frac=0.10)`` model, which
+performs the exact same rng draws in the exact same order — the produced
+masks and CSR arrays are bit-identical to the original two-run
+implementation (asserted in ``tests/test_stream.py``).
 """
 from __future__ import annotations
 
@@ -17,18 +26,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.graphs.csr import CSRGraph, from_edges
-
-
-def induced_subgraph(g: CSRGraph, keep_mask: np.ndarray, name: str) -> CSRGraph:
-    """Induced subgraph on ``keep_mask`` vertices, original id space."""
-    src = g.edge_sources()
-    dst = g.neighbors
-    e_keep = keep_mask[src] & keep_mask[dst]
-    w = g.weights[e_keep] if g.weights is not None else None
-    return from_edges(
-        src[e_keep], dst[e_keep], g.num_vertices, weights=w, dedup=False, name=name
-    )
+from repro.graphs.csr import CSRGraph, induced_subgraph  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,21 +45,16 @@ class EvolvingGraphPair:
 
 
 def make_evolving_pair(g: CSRGraph, seed: int = 0) -> EvolvingGraphPair:
-    rng = np.random.default_rng(seed)
-    n = g.num_vertices
-    # Run 1: random 80% of vertices.
-    mask1 = np.zeros(n, dtype=bool)
-    mask1[rng.choice(n, size=int(0.8 * n), replace=False)] = True
-    run1 = induced_subgraph(g, mask1, g.name + "@run1")
+    """§VI two-run protocol — the E=2 epoch sequence under uniform churn."""
+    # Imported here: repro.stream builds on repro.graphs, not the reverse.
+    from repro.stream.snapshots import snapshot_sequence
+    from repro.stream.updates import UniformChurn
 
-    # Run 2: delete 10% of run-1's vertices, add 10% (of the original count)
-    # from the not-yet-selected pool.
-    in1 = np.flatnonzero(mask1)
-    out1 = np.flatnonzero(~mask1)
-    n_del = int(0.10 * len(in1))
-    n_add = min(int(0.10 * n), len(out1))
-    mask2 = mask1.copy()
-    mask2[rng.choice(in1, size=n_del, replace=False)] = False
-    mask2[rng.choice(out1, size=n_add, replace=False)] = True
-    run2 = induced_subgraph(g, mask2, g.name + "@run2")
-    return EvolvingGraphPair(base=g, run1=run1, run2=run2, mask1=mask1, mask2=mask2)
+    seq = snapshot_sequence(g, UniformChurn(), epochs=2, seed=seed)
+    return EvolvingGraphPair(
+        base=g,
+        run1=dataclasses.replace(seq.graphs[0], name=g.name + "@run1"),
+        run2=dataclasses.replace(seq.graphs[1], name=g.name + "@run2"),
+        mask1=seq.masks[0],
+        mask2=seq.masks[1],
+    )

@@ -121,7 +121,10 @@ def road_graph(
 
 # name -> (generator kind, vertices, edges, kwargs). Scaled ~1/8 of Table VII
 # (paired with the 1/8-1/16-scaled cache hierarchy in memsim.config.SCALED).
+# "tiny" is not a paper input: it is the fast-iteration cell used by the
+# stream-protocol tests and the CI streaming smoke (seconds, not minutes).
 DATASETS: Dict[str, dict] = {
+    "tiny": dict(kind="powerlaw", n=3_000, m=9_000, gamma=2.2, seed=21),
     "amazon": dict(kind="rmat", n=50_000, m=424_000, a=0.57, seed=11),
     "stanford": dict(kind="rmat", n=35_000, m=289_000, a=0.65, seed=12),
     "youtube": dict(kind="powerlaw", n=145_000, m=374_000, gamma=2.1, seed=13),

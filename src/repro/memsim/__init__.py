@@ -34,7 +34,7 @@ from repro.memsim.hierarchy import (
     simulate_with_prefetch,
 )
 from repro.memsim.timing import TimingModel, estimate_cycles
-from repro.memsim.metrics import PrefetchMetrics, evaluate, geomean
+from repro.memsim.metrics import PrefetchMetrics, evaluate, geomean, summarize_epochs
 
 __all__ = [
     "CacheLevelConfig",
@@ -56,4 +56,5 @@ __all__ = [
     "PrefetchMetrics",
     "evaluate",
     "geomean",
+    "summarize_epochs",
 ]

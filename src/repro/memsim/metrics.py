@@ -195,3 +195,31 @@ def geomean(xs) -> float:
     xs = np.asarray(list(xs), dtype=np.float64)
     xs = np.maximum(xs, 1e-12)
     return float(np.exp(np.log(xs).mean()))
+
+
+def summarize_epochs(metrics) -> dict:
+    """Drift-curve aggregates over an epoch-ordered metric sequence.
+
+    Used by the streaming protocol (``repro.stream.protocol``): per-epoch
+    accuracy/coverage/speedup arrays plus the tail means from epoch 2 on
+    (0-indexed epoch 1) — epoch 1 is always cold for cross-epoch
+    prefetchers, so the tail is where lifecycle policies differentiate.
+    """
+    ms = list(metrics)
+    if not ms:
+        raise ValueError("summarize_epochs needs at least one epoch")
+    coverage = [float(m.coverage) for m in ms]
+    accuracy = [float(m.accuracy) for m in ms]
+    speedup = [float(m.speedup) for m in ms]
+    tail = slice(1, None) if len(ms) > 1 else slice(None)
+    return {
+        "coverage": coverage,
+        "accuracy": accuracy,
+        "speedup": speedup,
+        "geomean_speedup": geomean(speedup),
+        "mean_coverage": float(np.mean(coverage)),
+        "mean_accuracy": float(np.mean(accuracy)),
+        "tail_mean_coverage": float(np.mean(coverage[tail])),
+        "tail_mean_accuracy": float(np.mean(accuracy[tail])),
+        "tail_geomean_speedup": geomean(speedup[tail]),
+    }

@@ -1,0 +1,81 @@
+"""Multi-epoch evolving-graph streaming subsystem.
+
+Turns the paper's §VI two-snapshot protocol into a scenario engine: churn
+models generate deterministic batched update streams (:mod:`updates`),
+delta application yields an epoch sequence of CSR snapshots with churn
+stats (:mod:`snapshots`), the AMC correlation tables are carried across
+epoch boundaries under pluggable lifecycle policies (:mod:`lifecycle`),
+and :mod:`protocol` ties it into the ``Experiment`` grid — per-epoch
+traces cached as workload artifacts, per-epoch metrics, drift-curve
+aggregates.
+
+The update/snapshot layers depend only on the graph substrate; the
+lifecycle and protocol layers (which pull in the AMC core and the
+execution engine) load lazily on first attribute access, so
+``repro.graphs`` can build on snapshots without a circular import.
+"""
+from repro.stream.snapshots import (
+    EpochStats,
+    SnapshotSequence,
+    apply_delta,
+    snapshot_sequence,
+)
+from repro.stream.updates import (
+    CHURN_MODELS,
+    CommunityChurn,
+    DeltaBatch,
+    PreferentialGrowth,
+    SlidingWindow,
+    UniformChurn,
+    UpdateStream,
+)
+
+_LAZY = {
+    "LIFECYCLE_POLICIES": "repro.stream.lifecycle",
+    "TableLifecycle": "repro.stream.lifecycle",
+    "EpochTableReport": "repro.stream.lifecycle",
+    "EpochCell": "repro.stream.protocol",
+    "StreamEpochSpec": "repro.stream.protocol",
+    "StreamResult": "repro.stream.protocol",
+    "StreamSpec": "repro.stream.protocol",
+    "drift_payload": "repro.stream.protocol",
+    "run_stream": "repro.stream.protocol",
+    "score_stream": "repro.stream.protocol",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))
+
+
+__all__ = [
+    "CHURN_MODELS",
+    "CommunityChurn",
+    "DeltaBatch",
+    "EpochCell",
+    "EpochStats",
+    "EpochTableReport",
+    "LIFECYCLE_POLICIES",
+    "PreferentialGrowth",
+    "SlidingWindow",
+    "SnapshotSequence",
+    "StreamEpochSpec",
+    "StreamResult",
+    "StreamSpec",
+    "TableLifecycle",
+    "UniformChurn",
+    "UpdateStream",
+    "apply_delta",
+    "drift_payload",
+    "run_stream",
+    "score_stream",
+    "snapshot_sequence",
+]

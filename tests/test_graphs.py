@@ -81,6 +81,25 @@ def test_evolving_pair_protocol():
         assert mask[src].all() and mask[run.neighbors].all()
 
 
+def test_vertex_overlap_empty_and_fully_churned():
+    """Degenerate overlaps must be well-defined 0.0, not a ZeroDivision."""
+    from repro.graphs import EvolvingGraphPair
+
+    g = from_edges([0, 1, 2], [1, 2, 3], 6)
+    empty = np.zeros(6, dtype=bool)
+    half = np.array([True, True, True, False, False, False])
+    other = ~half
+    # run-1 empty: denominator is max(0, 1)
+    pair = EvolvingGraphPair(base=g, run1=g, run2=g, mask1=empty, mask2=half)
+    assert pair.vertex_overlap == 0.0
+    # fully churned: disjoint vertex sets share nothing
+    pair = EvolvingGraphPair(base=g, run1=g, run2=g, mask1=half, mask2=other)
+    assert pair.vertex_overlap == 0.0
+    # both empty
+    pair = EvolvingGraphPair(base=g, run1=g, run2=g, mask1=empty, mask2=empty)
+    assert pair.vertex_overlap == 0.0
+
+
 def test_partition_balance_and_coverage():
     g = make_dataset("comdblp")
     parts, assign = partition_contiguous(g, num_parts=4)

@@ -1,0 +1,401 @@
+"""The multi-epoch streaming subsystem: update streams, delta snapshots,
+AMC table lifecycle, and the stream protocol on the Experiment engine.
+
+Covers the subsystem's contracts: churn models are deterministic from the
+seed; delta application reproduces the induced-subgraph construction bit
+for bit (so the §VI pair is truly the E=2 special case); the ``reset``
+lifecycle equals an independent cold run of every epoch; ``persist`` with
+zero churn reproduces the paper's same-graph re-run behavior; and a
+stream's serial and ``workers=2`` runs are byte-identical.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ArtifactCache, Experiment, WorkloadCache
+from repro.core.amc.storage import AMCEntryTable, AMCStorage
+from repro.core.exec.scheduler import rows_equal
+from repro.core.experiment import score_prefetcher
+from repro.core.registry import get_prefetcher
+from repro.graphs import make_dataset, make_evolving_pair
+from repro.graphs.csr import induced_subgraph
+from repro.stream import (
+    CommunityChurn,
+    PreferentialGrowth,
+    SlidingWindow,
+    StreamSpec,
+    TableLifecycle,
+    UniformChurn,
+    apply_delta,
+    snapshot_sequence,
+)
+
+TINY = "tiny"
+ALL_MODELS = [
+    UniformChurn(),
+    CommunityChurn(),
+    SlidingWindow(),
+    PreferentialGrowth(),
+]
+
+
+@pytest.fixture(scope="module")
+def base():
+    return make_dataset(TINY)
+
+
+# ---------------------------------------------------------------- updates
+
+
+@pytest.mark.parametrize("model", ALL_MODELS, ids=lambda m: type(m).kind)
+def test_update_streams_deterministic(base, model):
+    a = model.generate(base, epochs=4, seed=7)
+    b = model.generate(base, epochs=4, seed=7)
+    c = model.generate(base, epochs=4, seed=8)
+    assert a.num_epochs == 4 and len(a.batches) == 3
+    np.testing.assert_array_equal(a.init_src, b.init_src)
+    for ba, bb in zip(a.batches, b.batches):
+        np.testing.assert_array_equal(ba.add_src, bb.add_src)
+        np.testing.assert_array_equal(ba.del_src, bb.del_src)
+    # a different seed must actually change the stream
+    assert any(
+        len(x.add_src) != len(y.add_src) or not np.array_equal(x.add_src, y.add_src)
+        for x, y in zip(a.batches, c.batches)
+    ) or not np.array_equal(a.init_src, c.init_src)
+
+
+def test_sliding_window_constant_size_and_churn(base):
+    model = SlidingWindow(window_frac=0.5, step_frac=0.1)
+    seq = snapshot_sequence(base, model, epochs=5, seed=1)
+    sizes = {g.num_edges for g in seq.graphs}
+    assert len(sizes) == 1  # circular window: every epoch the same size
+    for batch in seq.batches:
+        assert batch.num_inserts == batch.num_deletes > 0
+    with pytest.raises(ValueError, match="lap itself"):
+        SlidingWindow(window_frac=0.9, step_frac=0.2)
+
+
+def test_sliding_window_always_slides_after_rounding():
+    """Regression: integer rounding of window+step may exceed m (e.g.
+    0.95+0.05 of 10 edges rounds to 10+1); the window must still move —
+    reported churn has to be real churn."""
+    from repro.graphs.csr import from_edges
+
+    g = from_edges(np.arange(10), np.arange(10) + 1, 11)
+    seq = snapshot_sequence(
+        g, SlidingWindow(window_frac=0.95, step_frac=0.05), epochs=3, seed=0
+    )
+    for e in range(1, 3):
+        batch = seq.batches[e - 1]
+        # deleted and inserted edge sets are disjoint: the window moved
+        del_keys = set(zip(batch.del_src, batch.del_dst))
+        add_keys = set(zip(batch.add_src, batch.add_dst))
+        assert batch.num_updates > 0 and not (del_keys & add_keys)
+        assert not np.array_equal(
+            seq.graphs[e].neighbors, seq.graphs[e - 1].neighbors
+        )
+
+
+def test_preferential_growth_monotone(base):
+    seq = snapshot_sequence(base, PreferentialGrowth(), epochs=4, seed=2)
+    sizes = [g.num_edges for g in seq.graphs]
+    assert sizes == sorted(sizes) and sizes[-1] > sizes[0]
+    assert all(b.num_deletes == 0 for b in seq.batches)
+
+
+# --------------------------------------------------------------- snapshots
+
+
+@pytest.mark.parametrize(
+    "model", [UniformChurn(), CommunityChurn()], ids=lambda m: type(m).kind
+)
+def test_apply_delta_matches_induced_construction(base, model):
+    """The vectorized delta path and the §VI induced-subgraph path must
+    produce identical CSR arrays (canonical edge order)."""
+    seq = snapshot_sequence(base, model, epochs=4, seed=5)
+    for e in range(1, seq.num_epochs):
+        d = apply_delta(seq.graphs[e - 1], seq.batches[e - 1], name="delta")
+        np.testing.assert_array_equal(d.offsets, seq.graphs[e].offsets)
+        np.testing.assert_array_equal(d.neighbors, seq.graphs[e].neighbors)
+        if d.weights is not None:
+            np.testing.assert_array_equal(d.weights, seq.graphs[e].weights)
+
+
+def test_evolving_pair_is_the_e2_special_case(base):
+    """make_evolving_pair == snapshot_sequence(UniformChurn(), epochs=2),
+    bit for bit — masks, CSR arrays, and the rng draw sequence."""
+    pair = make_evolving_pair(base, seed=3)
+    seq = snapshot_sequence(base, UniformChurn(), epochs=2, seed=3)
+    np.testing.assert_array_equal(pair.mask1, seq.masks[0])
+    np.testing.assert_array_equal(pair.mask2, seq.masks[1])
+    for run, g in [(pair.run1, seq.graphs[0]), (pair.run2, seq.graphs[1])]:
+        np.testing.assert_array_equal(run.offsets, g.offsets)
+        np.testing.assert_array_equal(run.neighbors, g.neighbors)
+    # the legacy rng call sequence, replayed by hand
+    rng = np.random.default_rng(3)
+    n = base.num_vertices
+    mask1 = np.zeros(n, dtype=bool)
+    mask1[rng.choice(n, size=int(0.8 * n), replace=False)] = True
+    np.testing.assert_array_equal(pair.mask1, mask1)
+    run1 = induced_subgraph(base, mask1, "ref")
+    np.testing.assert_array_equal(pair.run1.neighbors, run1.neighbors)
+
+
+def test_snapshot_stats_and_changed_vertices(base):
+    seq = snapshot_sequence(base, UniformChurn(), epochs=3, seed=0)
+    s0, s1, _ = seq.stats
+    assert s0.vertex_overlap == 1.0 and s0.edge_churn == 0.0
+    assert 0.8 < s1.vertex_overlap < 0.95
+    assert s1.edges_added >= 0 and s1.edges_deleted > 0
+    changed = seq.changed_vertices(1)
+    toggled = np.flatnonzero(seq.masks[0] != seq.masks[1])
+    assert np.isin(toggled, changed).all()  # presence flips always count
+    with pytest.raises(IndexError):
+        seq.changed_vertices(0)
+
+
+# --------------------------------------------------------- table lifecycle
+
+
+def _table(iteration, trigger, nmiss_per_entry=2, age=0):
+    n = len(trigger)
+    nmiss = np.full(n, nmiss_per_entry, dtype=np.int64)
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(nmiss, out=offsets[1:])
+    return AMCEntryTable(
+        iteration=iteration,
+        trigger_vid=np.asarray(trigger, dtype=np.int64),
+        prev_vid=np.full(n, -1, dtype=np.int64),
+        mode=np.zeros(n, np.int8),
+        nmiss=nmiss,
+        bits=np.full(n, 64, dtype=np.int64),
+        miss_offsets=offsets,
+        miss_blocks=np.arange(offsets[-1], dtype=np.int64),
+        age=age,
+    )
+
+
+def test_invalidate_triggers_subsets_ragged_arrays():
+    storage = AMCStorage(1 << 20)
+    storage.recording[0] = _table(0, trigger=[1, 5, 9, 12])
+    storage.swap()
+    dropped = storage.invalidate_triggers(np.array([5, 12]))
+    assert dropped == 2 and storage.invalidated_entries == 2
+    t = storage.prefetching[0]
+    np.testing.assert_array_equal(t.trigger_vid, [1, 9])
+    # ragged miss streams re-packed: entry 0 keeps blocks [0,1], entry 1
+    # (originally entry 2) keeps blocks [4,5]
+    np.testing.assert_array_equal(t.miss_offsets, [0, 2, 4])
+    np.testing.assert_array_equal(t.miss_blocks, [0, 1, 4, 5])
+
+
+def test_swap_retaining_ages_and_drops():
+    storage = AMCStorage(1 << 20)
+    storage.recording[0] = _table(0, trigger=[1])
+    storage.recording[1] = _table(1, trigger=[2])
+    storage.swap()
+    # next epoch re-records iteration 0 only
+    storage.recording[0] = _table(0, trigger=[3])
+    storage.swap_retaining(max_age=1)
+    assert set(storage.prefetching) == {0, 1}
+    assert storage.prefetching[0].age == 0  # fresh recording wins
+    assert storage.prefetching[1].age == 1  # carried fallback, aged
+    # one more epoch with nothing recorded: iteration 1 exceeds max_age
+    storage.swap_retaining(max_age=1)
+    assert set(storage.prefetching) == {0}
+    assert storage.aged_out_tables == 1
+
+
+def test_lookup_counters_and_staleness():
+    storage = AMCStorage(1 << 20)
+    storage.recording[0] = _table(0, trigger=[1], age=0)
+    storage.swap()
+    assert storage.lookup(0) is not None and storage.lookup(7) is None
+    assert storage.lookup_hits == 1 and storage.lookup_misses == 1
+    storage.prefetching[0].age = 2
+    storage.lookup(0)
+    assert storage.stale_hits == 1
+
+
+def test_lifecycle_policy_validation():
+    with pytest.raises(ValueError, match="unknown lifecycle"):
+        TableLifecycle("warm-ish", capacity_bytes=1024)
+
+
+# ---------------------------------------------------------------- protocol
+
+
+@pytest.fixture(scope="module")
+def arts(tmp_path_factory):
+    return ArtifactCache(tmp_path_factory.mktemp("stream-artifacts"))
+
+
+@pytest.fixture(scope="module")
+def stream_cache(arts):
+    return WorkloadCache(artifacts=arts)
+
+
+@pytest.fixture(scope="module")
+def persist_result(stream_cache):
+    spec = StreamSpec("pgd", TINY, SlidingWindow(), epochs=3, lifecycle="persist")
+    result = Experiment(
+        workloads=[spec], prefetchers=["amc", "nextline2"], cache=stream_cache
+    ).run()
+    return spec, result
+
+
+def test_stream_spec_validation():
+    with pytest.raises(ValueError, match=">= 2 epochs"):
+        StreamSpec("pgd", TINY, SlidingWindow(), epochs=1)
+    with pytest.raises(ValueError, match="unknown lifecycle"):
+        StreamSpec("pgd", TINY, SlidingWindow(), lifecycle="sometimes")
+    with pytest.raises(TypeError, match="churn model"):
+        StreamSpec("pgd", TINY, churn="sliding")
+    with pytest.raises(ValueError, match="unknown dataset"):
+        Experiment(
+            workloads=[StreamSpec("pgd", "nope", SlidingWindow())],
+            prefetchers=["amc"],
+        )
+
+
+def test_epoch_specs_are_distinct_cache_keys(arts):
+    spec = StreamSpec("pgd", TINY, SlidingWindow(), epochs=3)
+    eps = spec.epoch_specs()
+    assert len({arts.path_for(e) for e in eps}) == 3
+    # churn kind and parameters move the key
+    other = dataclasses.replace(eps[0], churn=SlidingWindow(step_frac=0.2))
+    assert arts.path_for(other) != arts.path_for(eps[0])
+    assert "_e1_" in arts.path_for(eps[1]).name
+    # lifecycle is NOT part of the epoch identity: persist/reset share builds
+    a = StreamSpec("pgd", TINY, SlidingWindow(), epochs=3, lifecycle="persist")
+    b = StreamSpec("pgd", TINY, SlidingWindow(), epochs=3, lifecycle="reset")
+    assert a.epoch_specs() == b.epoch_specs()
+
+
+def test_stream_through_experiment(persist_result):
+    spec, result = persist_result
+    rows = result.rows()
+    assert len(rows) == 2 * spec.epochs
+    amc_rows = [r for r in rows if r["prefetcher"] == "amc"]
+    assert [r["epoch"] for r in amc_rows] == [0, 1, 2]
+    assert all(r["lifecycle"] == "persist" for r in amc_rows)
+    # epoch 0 is cold (nothing to replay); later epochs carry correlations
+    assert amc_rows[0]["coverage"] == 0.0
+    assert amc_rows[1]["coverage"] > 0.1 and amc_rows[2]["coverage"] > 0.1
+    # per-epoch table accounting is attached
+    table = amc_rows[1]["info"]["table"]
+    assert table["lookup_hits"] > 0 and table["policy"] == "persist"
+    # stateless baselines carry no lifecycle
+    nl = [r for r in rows if r["prefetcher"] == "nextline2"]
+    assert all(r["lifecycle"] is None for r in nl)
+    # drift payload round-trips through the documented schema
+    from repro.stream.protocol import drift_payload
+
+    cells = [c for c in result.cells if c.prefetcher == "amc"]
+    doc = drift_payload(spec, spec.sequence(), cells)
+    assert doc["schema"] == "stream-drift" and doc["churn"]["kind"] == "sliding_window"
+    assert len(doc["prefetchers"]["amc"]["summary"]["coverage"]) == 3
+    assert len(doc["overlap"]["cumulative_overlap"]) == 3
+
+
+def test_reset_equals_independent_cold_runs(stream_cache, persist_result):
+    """Property: with the ``reset`` lifecycle, every epoch's metrics equal
+    an independent cold AMC run of that epoch's trace."""
+    spec = StreamSpec("pgd", TINY, SlidingWindow(), epochs=3, lifecycle="reset")
+    result = Experiment(
+        workloads=[spec], prefetchers=["amc"], cache=stream_cache
+    ).run()
+    gen = get_prefetcher("amc").instantiate()
+    for cell in result.cells:
+        cold = score_prefetcher(stream_cache.get_or_build(cell.spec), "amc", gen)
+        row, cold_row = cell.metrics.row(), cold.row()
+        row_info, cold_info = row.pop("info"), cold_row.pop("info")
+        assert row == cold_row, f"epoch {cell.epoch}"
+        for k in cold_info:  # lifecycle adds keys; shared ones must match
+            np.testing.assert_array_equal(row_info[k], cold_info[k])
+
+
+def test_persist_zero_churn_reproduces_same_graph_rerun(stream_cache):
+    """Property: zero churn + persist == the paper's same-graph re-run —
+    epoch >= 2 replays a previous identical run, so coverage must be
+    positive and no lower than the cold first epoch."""
+    static = UniformChurn(init_frac=1.0, del_frac=0.0, add_frac=0.0)
+    spec = StreamSpec("pgd", TINY, static, epochs=3, lifecycle="persist")
+    result = Experiment(
+        workloads=[spec], prefetchers=["amc"], cache=stream_cache
+    ).run()
+    seq = spec.sequence()
+    assert all(s.vertex_overlap == 1.0 for s in seq.stats)
+    cov = [c.metrics.coverage for c in sorted(result.cells, key=lambda c: c.epoch)]
+    assert cov[1] >= cov[0] and cov[1] > 0.3
+    assert cov[2] == pytest.approx(cov[1], rel=0.2)
+
+
+def test_stream_parallel_matches_serial(stream_cache, persist_result):
+    spec, serial = persist_result
+    parallel = Experiment(
+        workloads=[spec], prefetchers=["amc", "nextline2"], cache=stream_cache
+    ).run(workers=2)
+    assert rows_equal(serial.rows(), parallel.rows())
+
+
+def test_figures_load_skips_stream_artifacts(tmp_path):
+    """benchmarks.figures.load must skip drift JSONs (and other unknown
+    schemas) instead of KeyError-ing; fig_drift consumes them instead."""
+    import json
+    import sys
+
+    sys.path.insert(0, ".")
+    from benchmarks import figures
+
+    sweep_doc = {
+        "kernel": "pgd",
+        "dataset": "tiny",
+        "prefetchers": {"amc": {"speedup": 1.2, "coverage": 0.5, "accuracy": 0.9}},
+    }
+    drift_doc = {
+        "schema": "stream-drift",
+        "kernel": "pgd",
+        "dataset": "tiny",
+        "lifecycle": "persist",
+        "churn": {"kind": "sliding_window"},
+        "overlap": {"cumulative_overlap": [1.0, 0.9]},
+        "prefetchers": {
+            "amc": {
+                "lifecycle": "persist",
+                "summary": {
+                    "coverage": [0.0, 0.6],
+                    "accuracy": [0.0, 0.9],
+                    "tail_mean_coverage": 0.6,
+                    "tail_mean_accuracy": 0.9,
+                },
+            }
+        },
+    }
+    (tmp_path / "pgd_tiny.json").write_text(json.dumps(sweep_doc))
+    (tmp_path / "drift_pgd_tiny.json").write_text(json.dumps(drift_doc))
+    (tmp_path / "other.json").write_text(json.dumps({"schema": "future-thing"}))
+    (tmp_path / "corrupt.json").write_text('{"kernel": "pgd", "trunc')
+    (tmp_path / "array.json").write_text("[1, 2, 3]")
+    data = figures.load(str(tmp_path))
+    assert set(data) == {("pgd", "tiny")}
+    streams = figures.load_streams(str(tmp_path))
+    assert set(streams) == {("pgd", "tiny", "sliding_window", "persist")}
+    headers, rows, derived = figures.fig_drift(streams)
+    assert rows and rows[0][1] == "amc"
+    assert derived["tail_mean_coverage/pgd/tiny/sliding_window/amc[persist]"] == 0.6
+
+
+def test_streams_mix_with_plain_workloads(stream_cache):
+    from repro.core import WorkloadSpec
+
+    spec = StreamSpec("pgd", TINY, SlidingWindow(), epochs=3)
+    plain = WorkloadSpec("pgd", TINY)
+    result = Experiment(
+        workloads=[plain, spec], prefetchers=["nextline2"], cache=stream_cache
+    ).run()
+    rows = result.rows()
+    assert len(rows) == 1 + spec.epochs
+    assert "epoch" not in rows[0]  # plain cells keep the legacy schema
+    assert [r["epoch"] for r in rows[1:]] == [0, 1, 2]
