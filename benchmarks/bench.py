@@ -1,20 +1,29 @@
 """Perf-trajectory benchmark harness for the experiment execution engine.
 
-Times the pipeline stages (trace generation, demand simulation with
-per-level ``cache_pass[l1|l2|llc]`` breakdown, per-prefetcher scoring),
-the end-to-end evaluation grid — serial with a cold workload-artifact
-cache, then at each ``--workers`` count against the warm cache — and
-(schema v3) a small 3-epoch evolving-graph stream cell with the
-stream-protocol stage breakdown (``update_apply``, ``trace_epoch``,
-``table_carry``) and its own serial-vs-parallel parity gate, and emits
-a schema-stable ``BENCH_<date>.json`` at the repo root (never clobbering an
-existing file: reruns on the same date get a ``.2``, ``.3``, ... infix so
-the trajectory keeps its before/after points).  The dated JSONs accumulate
-as the repo's machine-readable perf trajectory; CI runs ``--smoke``
-(1 kernel x 1 dataset x 3 prefetchers) on every push, uploads the JSON as
-a build artifact, and fails this script (exit 1) when the grid errors,
-parallel results diverge from serial, or the set-parallel cache engine
-diverges from the serial ``lax.scan`` reference.
+Times the pipeline stages (trace generation with the ``trace_emit``
+sub-stage, demand simulation with per-level ``cache_pass[l1|l2|llc]``
+breakdown, per-prefetcher scoring), the end-to-end evaluation grid —
+serial with a cold workload-artifact cache, then at each ``--workers``
+count against the warm cache — and a small 3-epoch evolving-graph stream
+cell with the stream-protocol stage breakdown (``update_apply``,
+``trace_epoch``, ``table_carry``) and its own serial-vs-parallel parity
+gate, and emits a schema-stable ``BENCH_<date>.json`` at the repo root
+(never clobbering an existing file: reruns on the same date get a ``.2``,
+``.3``, ... infix so the trajectory keeps its before/after points).
+
+Schema v4 adds the trace-emitter section: a full-workload rebuild under
+the per-iteration *reference* emitter gated bit-identical against the
+batched whole-run emitter, an emission micro-bench over representative
+runs (including the long-horizon ``tinyroad`` traversal where the batched
+pass wins hardest), and a ``bfs_do`` (direction-optimizing BFS) cell in
+the full grid so pull-mode traces ride the whole pipeline.
+
+The dated JSONs accumulate as the repo's machine-readable perf trajectory;
+CI runs ``--smoke`` (1 kernel x 1 dataset x 3 prefetchers) on every push,
+uploads the JSON as a build artifact, and fails this script (exit 1) when
+the grid errors, parallel results diverge from serial, the set-parallel
+cache engine diverges from the serial ``lax.scan`` reference, or the
+batched trace emitter diverges from the per-iteration reference.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench [--smoke]
@@ -38,7 +47,7 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 # Three prefetchers spanning the suite's families: the paper's contribution
 # (amc), a spatial baseline (vldp), and a replay baseline (rnr).  The
@@ -67,7 +76,15 @@ FULL_CELLS = [
     ("bellmanford", "comdblp", 0),
     ("bellmanford", "comdblp", 1),
     ("bellmanford", "comdblp", 2),
+    # Schema v4: direction-optimizing BFS — dense (pull) middle levels
+    # emit the in-edge/source-gather pattern through the full pipeline.
+    ("bfs_do", "comdblp", 0),
 ]
+# Emission micro-bench runs (schema v4): kernel runs re-emitted under both
+# emitters.  bfs/tinyroad is the long-horizon case (hundreds of small
+# frontiers — per-iteration overhead dominates the reference emitter);
+# pgd_pull/comdblp replays the dense body every iteration.
+EMITTER_MICRO = [("bfs", "tinyroad"), ("pgd_pull", "comdblp")]
 
 
 def _grid_seconds(specs, pairs, cache_dir, workers):
@@ -163,6 +180,70 @@ def main(argv=None) -> int:
             lvl: d.get(f"cache_pass[{lvl}]", 0.0) for lvl in ("l1", "l2", "llc")
         }
 
+    # --- trace-emitter gate + micro-bench (schema v4): the batched
+    # whole-run emitter must be bit-identical to the per-iteration
+    # reference on a full workload build, and the emission micro cases
+    # time both emitters over the same app runs.
+    import numpy as np
+
+    from repro.apps import get_kernel
+    from repro.apps.trace import TraceConfig, trace_run, use_emitter
+    from repro.graphs import make_dataset
+
+    ref_stages: dict = {}
+    with collect_stages(into=ref_stages), use_emitter("reference"):
+        ref_trace = specs[0].build()
+    emitter_ok = all(
+        np.array_equal(getattr(trace, f), getattr(ref_trace, f))
+        for f in ("block", "array_id", "elem", "iter_id", "epoch_id")
+    )
+    print(
+        f"[bench] trace emitter batched vs reference: "
+        f"{'ok' if emitter_ok else 'DIVERGED'} "
+        f"(trace_emit {stages.get('trace_emit', 0.0):.3f}s vs "
+        f"{ref_stages.get('trace_emit', 0.0):.3f}s)"
+    )
+    if not emitter_ok:
+        print(
+            "[bench] EMITTER FAILURE: batched whole-run emission diverges "
+            "from the per-iteration reference",
+            file=sys.stderr,
+        )
+    del ref_trace
+
+    emitter_micro = []
+    for mk, md in EMITTER_MICRO:
+        ks = get_kernel(mk)
+        g = make_dataset(md, weighted=ks.weighted)
+        run = ks.run(g)
+        cfg = TraceConfig(g.num_vertices, g.num_edges)
+        accesses = len(trace_run(run, cfg))
+        sample = {}
+        for emitter in ("batched", "reference"):
+            with use_emitter(emitter):
+                trace_run(run, cfg)  # warm (pull-body caches)
+                sample[emitter] = time_s(
+                    partial(trace_run, run, cfg), repeats=5
+                )
+        emitter_micro.append(
+            {
+                "workload": f"{mk}/{md}",
+                "iters": run.num_iters,
+                "accesses": accesses,
+                "batched_s": sample["batched"],
+                "reference_s": sample["reference"],
+                "speedup": sample["reference"] / sample["batched"]
+                if sample["batched"] > 0
+                else float("inf"),
+            }
+        )
+        print(
+            f"[bench] emit {mk}/{md} ({run.num_iters} iters): "
+            f"batched {sample['batched']:.4f}s vs reference "
+            f"{sample['reference']:.4f}s "
+            f"(x{emitter_micro[-1]['speedup']:.1f})"
+        )
+
     # --- engine/reference divergence gate: the set-parallel engine's hit
     # masks and one scored cell must be bit-identical to the serial scan.
     engine = current_engine()
@@ -175,8 +256,6 @@ def main(argv=None) -> int:
             pname, pgen = resolve_prefetchers(stage_names[:1])[0]
             ref_row = score_prefetcher(trace, pname, pgen).row()
         eng_row = score_prefetcher(trace, pname, pgen).row()
-        import numpy as np
-
         engine_ok = bool(
             np.array_equal(prof.l1_hit, ref_prof.l1_hit)
             and np.array_equal(prof.l2_hit, ref_prof.l2_hit)
@@ -275,10 +354,20 @@ def main(argv=None) -> int:
         "cache_engine": engine,
         "stages_s": {
             "trace_gen": stages.get("trace_gen", 0.0),
+            "trace_emit": stages.get("trace_emit", 0.0),
             "demand_sim": stages.get("demand_sim", 0.0),
             "cache_pass": _level_times(stages),
             "score": score_s,
             "score_cache_pass": _level_times(score_stages),
+        },
+        # Schema v4: batched whole-run emission vs the per-iteration
+        # reference — full-build stage times, parity, and the micro cases.
+        "trace_emitter": {
+            "rebuild_reference_s": {
+                "trace_gen": ref_stages.get("trace_gen", 0.0),
+                "trace_emit": ref_stages.get("trace_emit", 0.0),
+            },
+            "micro": emitter_micro,
         },
         "wallclock_s": {"serial_cold": serial_cold_s, "warm_by_workers": warm},
         "speedup_vs_serial_cold": {
@@ -305,6 +394,7 @@ def main(argv=None) -> int:
         },
         "parallel_matches_serial": parity,
         "engine_matches_reference": engine_ok,
+        "emitter_matches_reference": emitter_ok,
     }
     out_dir = Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -319,7 +409,7 @@ def main(argv=None) -> int:
         json.dump(out, f, indent=1)
         f.write("\n")
     print(f"[bench] wrote {out_path}")
-    return 0 if (parity and engine_ok) else 1
+    return 0 if (parity and engine_ok and emitter_ok) else 1
 
 
 if __name__ == "__main__":

@@ -1,42 +1,92 @@
 """Evolving-graph applications (Ligra-style, JAX) + memory-trace generation.
 
-Four kernels from the paper's evaluation:
-  PGD  -- PageRankDelta (early-convergence iterative; Ligra)
-  CC   -- Connected Components (label propagation; Ligra)
-  BFS  -- Breadth-First Search (run twice on evolving inputs)
-  BF   -- BellmanFord SSSP (run twice on evolving inputs)
+Kernels register declaratively (:mod:`repro.apps.registry`): the paper's
+four evaluation kernels plus two direction variants —
 
-Each app is written against the ``edge_map``/``vertex_map`` primitives in
-:mod:`repro.apps.ligra` (jitted ``jnp`` segment ops) and returns an
-:class:`repro.apps.ligra.AppRun` carrying per-iteration frontiers, which the
-tracer (:mod:`repro.apps.trace`) turns into the V/N/P/F memory access
-streams of the paper's Fig 3.
+  pgd      -- PageRankDelta (early-convergence iterative; Ligra)
+  cc       -- Connected Components (label propagation; Ligra)
+  bfs      -- Breadth-First Search (run twice on evolving inputs)
+  bellmanford -- BellmanFord SSSP (run twice on evolving inputs)
+  bfs_do   -- direction-optimizing BFS (Ligra dense/sparse switch)
+  pgd_pull -- PageRankDelta, dense pull traversal every iteration
+
+Each :class:`~repro.apps.registry.KernelSpec` carries the protocol metadata
+the engine dispatches on (weighted input, two-run epoch protocol, shared
+traversal root, traversal directions).  Kernels are written against the
+``edge_map``/``run_iterations`` primitives in :mod:`repro.apps.ligra`
+(jitted ``jnp`` segment ops over push/pull edge orders) and return an
+:class:`repro.apps.ligra.AppRun` carrying per-iteration frontiers and
+directions, which the tracer (:mod:`repro.apps.trace`) turns into the
+V/N/P/F (push) and F/T/V/NI/P (pull) access streams.
 """
+from collections.abc import Mapping as _Mapping
+
 from repro.apps.ligra import AppRun, edge_map_sum, edge_map_min
+from repro.apps.registry import (
+    KernelSpec,
+    get_kernel,
+    has_kernel,
+    kernel_traits,
+    list_kernels,
+    register_kernel,
+    register_kernel_variant,
+)
 from repro.apps.pagerank_delta import pagerank_delta
 from repro.apps.connected_components import connected_components
 from repro.apps.bfs import bfs
 from repro.apps.bellman_ford import bellman_ford
-from repro.apps.trace import TraceConfig, IterationTrace, trace_app_run, ARRAYS
+from repro.apps.trace import (
+    ARRAYS,
+    IterationTrace,
+    RunTrace,
+    TraceConfig,
+    trace_app_run,
+    trace_run,
+)
 
-KERNELS = {
-    "pgd": pagerank_delta,
-    "cc": connected_components,
-    "bfs": bfs,
-    "bellmanford": bellman_ford,
-}
+
+class _KernelsView(_Mapping):
+    """Legacy ``KERNELS`` name->callable view, live over the registry
+    (kernels registered later appear; direction variants run their
+    declared direction).  Read-only: register kernels through
+    ``register_kernel``, not by mutating this mapping."""
+
+    def __getitem__(self, name):
+        try:
+            return get_kernel(name).run
+        except KeyError:
+            raise KeyError(name) from None
+
+    def __iter__(self):
+        return iter(list_kernels())
+
+    def __len__(self):
+        return len(list_kernels())
+
+
+KERNELS = _KernelsView()
+
 
 __all__ = [
     "AppRun",
+    "KernelSpec",
     "edge_map_sum",
     "edge_map_min",
     "pagerank_delta",
     "connected_components",
     "bfs",
     "bellman_ford",
+    "get_kernel",
+    "has_kernel",
+    "kernel_traits",
+    "list_kernels",
+    "register_kernel",
+    "register_kernel_variant",
     "TraceConfig",
     "IterationTrace",
+    "RunTrace",
     "trace_app_run",
+    "trace_run",
     "ARRAYS",
     "KERNELS",
 ]

@@ -1,4 +1,9 @@
-"""BellmanFord SSSP (Ligra) — push-based relaxation with change frontier."""
+"""BellmanFord SSSP (Ligra) — edge relaxation with a change frontier.
+
+Push relaxes out-edges of changed vertices; pull scans in-edges per
+destination (weights ride the CSC transpose).  Distances are identical in
+either direction (min is order-free).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -8,18 +13,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps.bfs import pick_root
-from repro.apps.ligra import AppRun, run_iterations
+from repro.apps.ligra import AppRun, edge_endpoints, run_iterations, step_directions
+from repro.apps.registry import register_kernel
 from repro.graphs.csr import CSRGraph
 
 
+@register_kernel(
+    "bellmanford",
+    weighted=True,
+    epoch_protocol="per_run",
+    needs_root=True,
+    directions=("push", "pull", "auto"),
+    description="BellmanFord SSSP (run twice on evolving inputs)",
+)
 def bellman_ford(
     graph: CSRGraph,
     root: int | None = None,
     max_iters: int = 200,
     present_mask: np.ndarray | None = None,
+    direction: str = "push",
 ) -> AppRun:
     n = graph.num_vertices
-    offsets, neighbors, weights, edge_src = graph.device()
     if root is None:
         root = pick_root(graph, present_mask)
 
@@ -30,14 +44,21 @@ def bellman_ford(
     )
     inf = jnp.float32(3.0e38)
 
-    @partial(jax.jit, donate_argnums=())
-    def step(state, frontier_mask):
-        (dist,) = state
-        cand = jnp.where(frontier_mask[edge_src], dist[edge_src] + weights, inf)
-        best = jax.ops.segment_min(cand, neighbors, num_segments=n)
-        improved = (best < dist) & present
-        new_dist = jnp.where(improved, best, dist)
-        return (new_dist,), improved, ~jnp.any(improved)
+    def make_step(src_e, dst_e, w_e):
+        @partial(jax.jit, donate_argnums=())
+        def step(state, frontier_mask):
+            (dist,) = state
+            cand = jnp.where(frontier_mask[src_e], dist[src_e] + w_e, inf)
+            best = jax.ops.segment_min(cand, dst_e, num_segments=n)
+            improved = (best < dist) & present
+            new_dist = jnp.where(improved, best, dist)
+            return (new_dist,), improved, ~jnp.any(improved)
+
+        return step
+
+    steps = {
+        d: make_step(*edge_endpoints(graph, d)) for d in step_directions(direction)
+    }
 
     dist0 = jnp.full(n, inf, dtype=jnp.float32)
     dist0 = dist0.at[root].set(0.0)
@@ -49,7 +70,8 @@ def bellman_ford(
         graph=graph,
         init_state=(dist0,),
         init_frontier_mask=init_mask,
-        step_fn=step,
         max_iters=max_iters,
         extract_values=lambda s: s[0],
+        steps=steps,
+        direction=direction,
     )

@@ -1,7 +1,13 @@
-"""Breadth-First Search (Ligra BFS) — push-based parent assignment.
+"""Breadth-First Search (Ligra BFS) — frontier-parallel parent assignment.
 
 For the evolving-graph protocol the kernel is run twice (run-1 / run-2
 inputs from :mod:`repro.graphs.evolve`); the paper evaluates the second run.
+
+Registered as ``bfs`` (push) with a ``bfs_do`` variant running Ligra's
+direction-optimizing switch: wide middle levels go dense (pull over
+in-edges), narrow head/tail levels stay sparse (push) — the hybrid whose
+modality changes mid-run are exactly what phase-aware prefetcher analysis
+targets.  Parents are identical in every direction (min-id offer wins).
 """
 from __future__ import annotations
 
@@ -11,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.apps.ligra import AppRun, run_iterations
+from repro.apps.ligra import AppRun, edge_endpoints, run_iterations, step_directions
+from repro.apps.registry import register_kernel, register_kernel_variant
 from repro.graphs.csr import CSRGraph
 
 
@@ -23,14 +30,21 @@ def pick_root(graph: CSRGraph, present_mask: np.ndarray | None = None) -> int:
     return int(np.argmax(deg))
 
 
+@register_kernel(
+    "bfs",
+    epoch_protocol="per_run",
+    needs_root=True,
+    directions=("push", "pull", "auto"),
+    description="Breadth-First Search (run twice on evolving inputs)",
+)
 def bfs(
     graph: CSRGraph,
     root: int | None = None,
     max_iters: int = 200,
     present_mask: np.ndarray | None = None,
+    direction: str = "push",
 ) -> AppRun:
     n = graph.num_vertices
-    offsets, neighbors, _, edge_src = graph.device()
     if root is None:
         root = pick_root(graph, present_mask)
 
@@ -41,17 +55,27 @@ def bfs(
     )
     big = jnp.float32(n + 1)
 
-    @partial(jax.jit, donate_argnums=())
-    def step(state, frontier_mask):
-        (parent,) = state
-        # Active sources offer themselves as parent; min-id wins (Ligra's CAS
-        # winner is arbitrary; min makes it deterministic).
-        msg = jnp.where(frontier_mask[edge_src], edge_src.astype(jnp.float32), big)
-        offer = jax.ops.segment_min(msg, neighbors, num_segments=n)
-        unvisited = parent >= big
-        newly = unvisited & (offer < big) & present
-        new_parent = jnp.where(newly, offer, parent)
-        return (new_parent,), newly, ~jnp.any(newly)
+    def make_step(src_e, dst_e, _w):
+        @partial(jax.jit, donate_argnums=())
+        def step(state, frontier_mask):
+            (parent,) = state
+            # Active sources offer themselves as parent; min-id wins (Ligra's
+            # CAS winner is arbitrary; min makes it deterministic — and
+            # direction-independent).
+            msg = jnp.where(
+                frontier_mask[src_e], src_e.astype(jnp.float32), big
+            )
+            offer = jax.ops.segment_min(msg, dst_e, num_segments=n)
+            unvisited = parent >= big
+            newly = unvisited & (offer < big) & present
+            new_parent = jnp.where(newly, offer, parent)
+            return (new_parent,), newly, ~jnp.any(newly)
+
+        return step
+
+    steps = {
+        d: make_step(*edge_endpoints(graph, d)) for d in step_directions(direction)
+    }
 
     parent0 = jnp.full(n, big, dtype=jnp.float32)
     parent0 = parent0.at[root].set(root)
@@ -63,7 +87,16 @@ def bfs(
         graph=graph,
         init_state=(parent0,),
         init_frontier_mask=init_mask,
-        step_fn=step,
         max_iters=max_iters,
         extract_values=lambda s: s[0],
+        steps=steps,
+        direction=direction,
     )
+
+
+register_kernel_variant(
+    "bfs_do",
+    base="bfs",
+    direction="auto",
+    description="Direction-optimizing BFS (Ligra dense/sparse switch)",
+)

@@ -3,7 +3,8 @@
 Every vertex starts in its own component; active vertices push their label,
 destinations keep the min, and changed vertices stay active. On directed
 input the graph is symmetrized (CC is an undirected notion), matching
-Ligra's behavior.
+Ligra's behavior.  Pull traversal reduces the same min over in-edges of the
+symmetrized graph — labels are bit-identical (min is order-free).
 """
 from __future__ import annotations
 
@@ -13,18 +14,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.apps.ligra import AppRun, run_iterations
+from repro.apps.ligra import AppRun, edge_endpoints, run_iterations, step_directions
+from repro.apps.registry import register_kernel
 from repro.graphs.csr import CSRGraph, symmetrize
 
 
+@register_kernel(
+    "cc",
+    epoch_protocol="per_iteration",
+    directions=("push", "pull", "auto"),
+    description="Connected Components (label propagation; Ligra)",
+)
 def connected_components(
     graph: CSRGraph,
     max_iters: int = 100,
     present_mask: np.ndarray | None = None,
+    direction: str = "push",
 ) -> AppRun:
     und = symmetrize(graph)
     n = und.num_vertices
-    offsets, neighbors, _, edge_src = und.device()
 
     present = (
         jnp.asarray(present_mask)
@@ -33,14 +41,21 @@ def connected_components(
     )
     big = jnp.float32(n + 1)
 
-    @partial(jax.jit, donate_argnums=())
-    def step(state, frontier_mask):
-        (labels,) = state
-        msg = jnp.where(frontier_mask[edge_src], labels[edge_src], big)
-        incoming = jax.ops.segment_min(msg, neighbors, num_segments=n)
-        new_labels = jnp.minimum(labels, incoming)
-        changed = (new_labels < labels) & present
-        return (new_labels,), changed, ~jnp.any(changed)
+    def make_step(src_e, dst_e, _w):
+        @partial(jax.jit, donate_argnums=())
+        def step(state, frontier_mask):
+            (labels,) = state
+            msg = jnp.where(frontier_mask[src_e], labels[src_e], big)
+            incoming = jax.ops.segment_min(msg, dst_e, num_segments=n)
+            new_labels = jnp.minimum(labels, incoming)
+            changed = (new_labels < labels) & present
+            return (new_labels,), changed, ~jnp.any(changed)
+
+        return step
+
+    steps = {
+        d: make_step(*edge_endpoints(und, d)) for d in step_directions(direction)
+    }
 
     labels0 = jnp.where(
         present, jnp.arange(n, dtype=jnp.float32), big
@@ -52,8 +67,9 @@ def connected_components(
         graph=und,
         init_state=(labels0,),
         init_frontier_mask=init_mask,
-        step_fn=step,
         max_iters=max_iters,
         extract_values=lambda s: s[0],
+        steps=steps,
+        direction=direction,
     )
     return run

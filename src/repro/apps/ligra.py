@@ -1,28 +1,48 @@
-"""Ligra-style frontier primitives in JAX.
+"""Ligra-style frontier primitives in JAX, in both traversal directions.
 
 ``edge_map_*`` applies a per-edge message from *active sources* and
-segment-reduces into destinations — the push-based EDGEMAP of Ligra [53],
-which is what PGD/CC/BFS/BellmanFord in the paper use. The reduction runs
-over the full edge set with an activity mask (O(E) work but one fused XLA
-kernel per iteration; for the graph sizes here this is faster on CPU than
-gather-based sparse iteration and is exactly shardable under pjit).
+segment-reduces into destinations — Ligra's [53] EDGEMAP.  The same
+segment reduction runs in either direction; what changes is the per-edge
+array order it runs over (and therefore the memory-access modality the
+tracer emits):
+
+- **push** (sparse): edges in CSR (out-edge) order — active sources
+  scatter into destination properties.
+- **pull** (dense): edges in CSC (in-edge) order via
+  :meth:`~repro.graphs.csr.CSRGraph.transpose` — every destination scans
+  its in-edge row sequentially and gathers source properties.
+- **auto**: Ligra's direction-optimizing switch — an iteration goes dense
+  when the frontier plus its out-edges exceed ``|E| / dense_threshold``
+  (Ligra's default denominator is 20).
+
+The reduction runs over the full edge set with an activity mask (O(E) work
+but one fused XLA kernel per iteration; for the graph sizes here this is
+faster on CPU than gather-based sparse iteration and is exactly shardable
+under pjit).  Push and pull compute identical values per iteration — the
+contributions are the same multiset, only reduced in a different edge
+order — which the property tests assert kernel by kernel.
 
 Apps drive a Python iteration loop around jitted step functions and collect
-per-iteration frontiers on the host for the tracer. The loop itself is
-host-side because the *number* of iterations is data-dependent and each
-iteration's frontier must be exported anyway (trace generation).
+per-iteration frontiers (and directions) on the host for the tracer.  The
+loop itself is host-side because the *number* of iterations is
+data-dependent and each iteration's frontier must be exported anyway
+(trace generation).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+
+# Ligra's dense/sparse threshold denominator: an iteration runs dense
+# (pull) when |frontier| + outdeg(frontier) > |E| / DENSE_THRESHOLD.
+DENSE_THRESHOLD = 20
 
 
 @dataclasses.dataclass
@@ -35,10 +55,17 @@ class AppRun:
     values: np.ndarray  # final property array (rank / comp / parent / dist)
     num_iters: int
     stats: dict
+    directions: Optional[List[str]] = None  # per-iteration "push" | "pull"
 
     @property
     def total_active(self) -> int:
         return int(sum(len(f) for f in self.frontiers))
+
+    def iteration_directions(self) -> List[str]:
+        """Per-iteration traversal direction ("push" for legacy runs)."""
+        if self.directions is not None:
+            return self.directions
+        return ["push"] * len(self.frontiers)
 
     def frontier_masks(self, n: Optional[int] = None) -> List[np.ndarray]:
         n = n or self.graph.num_vertices
@@ -72,18 +99,71 @@ def edge_map_min(edge_src, neighbors, per_edge_value, frontier_mask, n, big):
     return _segment_min(contrib, neighbors, n)
 
 
+def edge_endpoints(graph: CSRGraph, direction: str):
+    """Per-edge ``(source, destination, weight)`` jnp arrays for one
+    traversal direction.
+
+    Push uses CSR (out-edge) order; pull uses the cached CSC transpose, so
+    edges appear in in-edge order — same (source, destination, weight)
+    multiset, different traversal order.  Kernels build one jitted step per
+    direction over these arrays; the step math is direction-agnostic.
+    """
+    if direction == "push":
+        _, neighbors, weights, edge_src = graph.device()
+        return edge_src, neighbors, weights
+    if direction == "pull":
+        t = graph.transpose()
+        _, in_sources, weights, edge_dst = t.device()
+        return in_sources, edge_dst, weights
+    raise ValueError(f"direction must be 'push' or 'pull'; got {direction!r}")
+
+
+def step_directions(direction: str) -> tuple:
+    """The concrete step directions a kernel must compile for ``direction``."""
+    if direction == "auto":
+        return ("push", "pull")
+    if direction in ("push", "pull"):
+        return (direction,)
+    raise ValueError(f"unknown traversal direction {direction!r}")
+
+
 def run_iterations(
     name: str,
     graph: CSRGraph,
     init_state: tuple,
     init_frontier_mask: np.ndarray,
-    step_fn: Callable,
-    max_iters: int,
-    extract_values: Callable,
+    step_fn: Optional[Callable] = None,
+    max_iters: int = 100,
+    extract_values: Callable = None,
     min_frontier: int = 1,
+    *,
+    steps: Optional[Dict[str, Callable]] = None,
+    direction: str = "push",
+    dense_threshold: int = DENSE_THRESHOLD,
 ) -> AppRun:
-    """Generic host loop: step_fn(state, frontier_mask) -> (state, new_mask, done)."""
+    """Generic host loop: step(state, frontier_mask) -> (state, new_mask, done).
+
+    ``steps`` maps a traversal direction to its jitted step function (push
+    and pull steps compute identical values over differently-ordered edge
+    arrays); a bare ``step_fn`` is shorthand for ``steps={"push": step_fn}``.
+    Under ``direction="auto"`` each iteration picks dense (pull) or sparse
+    (push) by Ligra's frontier threshold; the per-iteration choices are
+    recorded on the returned :class:`AppRun` for the tracer, which emits a
+    different access pattern per direction.
+    """
+    if steps is None:
+        if step_fn is None:
+            raise ValueError("pass step_fn or steps={direction: fn}")
+        steps = {"push": step_fn}
+    for d in step_directions(direction):
+        if d not in steps:
+            raise ValueError(
+                f"direction {direction!r} needs a {d!r} step; have {sorted(steps)}"
+            )
+    out_deg = np.asarray(graph.degrees, dtype=np.int64)
+    dense_cut = graph.num_edges / dense_threshold
     frontiers: List[np.ndarray] = []
+    directions: List[str] = []
     mask = jnp.asarray(init_frontier_mask)
     state = init_state
     iters = 0
@@ -91,19 +171,39 @@ def run_iterations(
         active = np.flatnonzero(np.asarray(mask))
         if len(active) < min_frontier:
             break
+        if direction == "auto":
+            d = (
+                "pull"
+                if len(active) + int(out_deg[active].sum()) > dense_cut
+                else "push"
+            )
+        else:
+            d = direction
         frontiers.append(active.astype(np.int64))
-        state, mask, done = step_fn(state, mask)
+        directions.append(d)
+        state, mask, done = steps[d](state, mask)
         iters += 1
         if bool(done):
-            # Record the final frontier's work having run; loop exits next
-            # check anyway if mask is empty.
-            pass
+            # Converged: stop here instead of evaluating further steps.
+            # For the registered kernels at their shipped configurations
+            # the done flag fires only alongside an emptying frontier, so
+            # counts match the old ignore-done loop (test-asserted); a
+            # kernel whose convergence test is independent of the frontier
+            # (e.g. PGD with a loose epsilon) now stops at convergence
+            # instead of iterating on.
+            break
     values = np.asarray(extract_values(state))
+    dense_iters = directions.count("pull")
     return AppRun(
         name=name,
         graph=graph,
         frontiers=frontiers,
         values=values,
         num_iters=iters,
-        stats={"iters": iters, "total_active": int(sum(len(f) for f in frontiers))},
+        stats={
+            "iters": iters,
+            "total_active": int(sum(len(f) for f in frontiers)),
+            "dense_iters": dense_iters,
+        },
+        directions=directions,
     )

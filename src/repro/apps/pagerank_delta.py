@@ -4,6 +4,10 @@ Early-convergence PageRank: only vertices whose delta moved by more than a
 threshold stay active, so the frontier shrinks and shifts across iterations
 — the "non-repetitive irregular" pattern that defeats record-once
 prefetchers (RnR) and that AMC's per-iteration re-recording tracks.
+
+Registered as ``pgd`` (push) with a ``pgd_pull`` variant that traverses
+in-edges dense-style every iteration — the same ranks, a different access
+modality for AMC to train on.
 """
 from __future__ import annotations
 
@@ -13,10 +17,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.apps.ligra import AppRun, run_iterations
+from repro.apps.ligra import AppRun, edge_endpoints, run_iterations, step_directions
+from repro.apps.registry import register_kernel, register_kernel_variant
 from repro.graphs.csr import CSRGraph
 
 
+@register_kernel(
+    "pgd",
+    epoch_protocol="per_iteration",
+    directions=("push", "pull", "auto"),
+    description="PageRankDelta (early-convergence iterative; Ligra)",
+)
 def pagerank_delta(
     graph: CSRGraph,
     alpha: float = 0.85,
@@ -24,10 +35,12 @@ def pagerank_delta(
     epsilon: float = 1e-6,
     max_iters: int = 30,
     present_mask: np.ndarray | None = None,
+    direction: str = "push",
 ) -> AppRun:
     n = graph.num_vertices
-    offsets, neighbors, _, edge_src = graph.device()
-    deg = jnp.maximum(jnp.diff(offsets).astype(jnp.float32), 1.0)
+    # Contributions normalize by the *out*-degree of the source regardless
+    # of traversal direction.
+    deg = jnp.maximum(jnp.asarray(graph.degrees).astype(jnp.float32), 1.0)
 
     present = (
         jnp.asarray(present_mask)
@@ -36,25 +49,32 @@ def pagerank_delta(
     )
     n_present = jnp.maximum(jnp.sum(present.astype(jnp.float32)), 1.0)
 
-    @partial(jax.jit, donate_argnums=())
-    def step(state, frontier_mask):
-        delta, pr = state
-        contrib = jnp.where(
-            frontier_mask[edge_src], delta[edge_src] / deg[edge_src], 0.0
-        )
-        ngh_sum = jax.ops.segment_sum(contrib, neighbors, num_segments=n)
-        touched = ngh_sum != 0.0
-        new_delta = jnp.where(touched, alpha * ngh_sum, 0.0)
-        new_pr = pr + new_delta
-        # Ligra-style early convergence: a vertex stays active only while its
-        # rank still moves by more than a δ fraction of its accumulated rank.
-        new_mask = (
-            touched
-            & (jnp.abs(new_delta) > delta_threshold * jnp.abs(new_pr))
-            & present
-        )
-        error = jnp.sum(jnp.abs(ngh_sum))
-        return (new_delta, new_pr), new_mask, error < epsilon
+    def make_step(src_e, dst_e, _w):
+        @partial(jax.jit, donate_argnums=())
+        def step(state, frontier_mask):
+            delta, pr = state
+            contrib = jnp.where(
+                frontier_mask[src_e], delta[src_e] / deg[src_e], 0.0
+            )
+            ngh_sum = jax.ops.segment_sum(contrib, dst_e, num_segments=n)
+            touched = ngh_sum != 0.0
+            new_delta = jnp.where(touched, alpha * ngh_sum, 0.0)
+            new_pr = pr + new_delta
+            # Ligra-style early convergence: a vertex stays active only while
+            # its rank still moves by more than a δ fraction of its rank.
+            new_mask = (
+                touched
+                & (jnp.abs(new_delta) > delta_threshold * jnp.abs(new_pr))
+                & present
+            )
+            error = jnp.sum(jnp.abs(ngh_sum))
+            return (new_delta, new_pr), new_mask, error < epsilon
+
+        return step
+
+    steps = {
+        d: make_step(*edge_endpoints(graph, d)) for d in step_directions(direction)
+    }
 
     delta0 = jnp.where(present, 1.0 / n_present, 0.0).astype(jnp.float32)
     pr0 = jnp.zeros(n, dtype=jnp.float32) + delta0
@@ -65,7 +85,16 @@ def pagerank_delta(
         graph=graph,
         init_state=(delta0, pr0),
         init_frontier_mask=init_mask,
-        step_fn=step,
         max_iters=max_iters,
         extract_values=lambda s: s[1],
+        steps=steps,
+        direction=direction,
     )
+
+
+register_kernel_variant(
+    "pgd_pull",
+    base="pgd",
+    direction="pull",
+    description="PageRankDelta, dense pull traversal every iteration",
+)

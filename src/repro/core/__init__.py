@@ -22,14 +22,15 @@ Subpackages:
                   content-addressed workload artifact cache, stage timers
                   (``Experiment(...).run(workers=N)`` opts in)
 
-Deprecated (thin shims, see ``prefetchers/__init__.py`` for the policy):
-``run_prefetcher_suite`` and ``repro.core.prefetchers.SUITE``.
+The PR-1 deprecation shims (``run_prefetcher_suite``,
+``repro.core.prefetchers.SUITE``) have been removed per their stated
+policy; resolve prefetchers through the registry and score through
+``Experiment`` / ``score_prefetcher``.
 """
 from repro.core.driver import (
     WorkloadSpec,
     WorkloadTrace,
     build_workload,
-    run_prefetcher_suite,
 )
 from repro.core.exec.artifacts import ArtifactCache
 from repro.core.experiment import (
@@ -52,7 +53,6 @@ __all__ = [
     "WorkloadSpec",
     "WorkloadTrace",
     "build_workload",
-    "run_prefetcher_suite",
     "CellResult",
     "Experiment",
     "ExperimentResult",

@@ -11,37 +11,39 @@ sizes) in one frozen value, validated up front.  ``WorkloadSpec.build()``
 (or the ``build_workload`` convenience wrapper) produces the trace with the
 :class:`AMCSession` wired exactly as Algorithm 1 does.
 
-Scoring lives in :mod:`repro.core.experiment`; the ``run_prefetcher_suite``
-function kept here is a thin deprecation shim over it.
+Every kernel-protocol decision — weighted input, the §VI two-run evolving
+protocol, the shared traversal root, the AMC epoch structure, traversal
+direction — dispatches on the kernel's declarative
+:class:`~repro.apps.registry.KernelSpec`; there are no kernel-name string
+special-cases here.  Trace emission is the whole-run batched emitter
+(:func:`repro.apps.trace.trace_run`), bit-identical to the per-iteration
+reference oracle.
+
+Scoring lives in :mod:`repro.core.experiment`.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.apps import KERNELS, trace_app_run
+from repro.apps import get_kernel, has_kernel, kernel_traits, list_kernels
 from repro.apps.ligra import AppRun
-from repro.apps.trace import T_ID, TraceConfig, concat_traces
+from repro.apps.trace import T_ID, TraceConfig, trace_run
 from repro.core.amc.api import AMCSession
-from repro.core.amc.prefetcher import IterationView, PrefetchStream
+from repro.core.amc.prefetcher import IterationView
 from repro.core.exec.timers import stage
 from repro.graphs import DATASETS, make_dataset, make_evolving_pair
 from repro.memsim import (
     SCALED,
     DemandProfile,
     HierarchyConfig,
-    PrefetchMetrics,
     simulate_demand,
     simulate_with_prefetch,
 )
 from repro.memsim.config import BLOCK_BITS
 from repro.memsim.hierarchy import PrefetchOutcome
-
-# Kernels evaluated on the two-run evolving protocol (§VI).
-TWO_RUN_KERNELS = ("bfs", "bellmanford")
 
 # Version of the trace-construction pipeline below (app protocol, address
 # layout, demand/next-line simulation).  The workload artifact cache
@@ -49,7 +51,11 @@ TWO_RUN_KERNELS = ("bfs", "bellmanford")
 # whenever a change to this module (or to apps/graphs/memsim code it calls)
 # alters the built WorkloadTrace — every persisted artifact then reads as a
 # miss and is rebuilt instead of silently serving stale data.
-TRACE_CODE_VERSION = 1
+# v2: run_iterations stops at the kernel's done flag (converged-stop), which
+# can shorten runs whose convergence test is independent of the frontier
+# emptying — identical on the tested configs, but not provably for every
+# dataset, so old artifacts must not be served.
+TRACE_CODE_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,9 +91,9 @@ class WorkloadSpec:
         """Check kernel/dataset against the registries. Called before the
         app is run from names; skipped when caller-supplied ``runs`` make
         the names purely descriptive."""
-        if self.kernel not in KERNELS:
+        if not has_kernel(self.kernel):
             raise ValueError(
-                f"unknown kernel {self.kernel!r}; available: {sorted(KERNELS)}"
+                f"unknown kernel {self.kernel!r}; available: {sorted(list_kernels())}"
             )
         if self.dataset not in DATASETS:
             raise ValueError(
@@ -197,23 +203,26 @@ def _nextline_stream(profile: DemandProfile):
     return b[keep] + 1, p[keep]
 
 
-def _run_app(kernel: str, dataset: str, seed: int = 0):
-    """Run the kernel per the paper's protocol; returns (runs, epoch_of_iter)."""
-    fn = KERNELS[kernel]
-    weighted = kernel == "bellmanford"
-    g = make_dataset(dataset, weighted=weighted)
-    if kernel in TWO_RUN_KERNELS:
+def _run_app(kernel: str, dataset: str, seed: int = 0) -> List[AppRun]:
+    """Run the kernel per its spec's protocol; returns the run list."""
+    ks = get_kernel(kernel)
+    g = make_dataset(dataset, weighted=ks.weighted)
+    if ks.two_run:
         from repro.apps.bfs import pick_root
 
         pair = make_evolving_pair(g, seed=seed)
         # Same root for both runs so the traversals correlate (the paper's
         # BFS caveat: "if the parent node gets changed, the whole graph
         # traversal changes").
-        root = pick_root(pair.run1, pair.mask1 & pair.mask2)
-        r1 = fn(pair.run1, present_mask=pair.mask1, root=root)
-        r2 = fn(pair.run2, present_mask=pair.mask2, root=root)
+        root = (
+            pick_root(pair.run1, pair.mask1 & pair.mask2)
+            if ks.needs_root
+            else None
+        )
+        r1 = ks.run(pair.run1, present_mask=pair.mask1, root=root)
+        r2 = ks.run(pair.run2, present_mask=pair.mask2, root=root)
         return [r1, r2]
-    return [fn(g)]
+    return [ks.run(g)]
 
 
 def build_workload(
@@ -277,13 +286,17 @@ def _build_workload(
     ``cfg_trace`` overrides the address layout — the streaming protocol
     (``repro.stream.protocol``) lays every epoch of a stream out in one
     shared space so cross-epoch correlations stay valid.  ``epoch_mode``
-    selects the AMC-epoch structure: ``None`` keeps the per-kernel paper
-    protocol (PGD/CC: one epoch per iteration; BFS/BF: one per run);
-    ``"single"`` puts the whole trace in one epoch with the iteration index
-    as the within-epoch key — one *stream epoch*, replayed against the
-    previous epoch's recordings by the table lifecycle.
+    selects the AMC-epoch structure: ``None`` keeps the kernel spec's
+    declared ``epoch_protocol`` (per-iteration epochs, or one epoch per
+    run for the two-run kernels); ``"single"`` puts the whole trace in one
+    epoch with the iteration index as the within-epoch key — one *stream
+    epoch*, replayed against the previous epoch's recordings by the table
+    lifecycle.
     """
     kernel, dataset, hierarchy = spec.kernel, spec.dataset, spec.hierarchy
+    # Ad-hoc kernel names with caller-supplied runs get the default
+    # per-iteration traits; registered kernels dispatch on their spec.
+    ks = kernel_traits(kernel)
     with stage("trace_gen"):
         runs = runs if runs is not None else _run_app(kernel, dataset, spec.seed)
         if cfg_trace is None:
@@ -294,25 +307,40 @@ def _build_workload(
                 num_edges=max(r.graph.num_edges for r in runs),
             )
 
-        all_traces = []
-        iter_epochs: List[Tuple[int, int]] = []
-        git = 0
-        run_start_iter = []
-        for run_idx, run in enumerate(runs):
-            traces = trace_app_run(run, cfg_trace)
-            run_start_iter.append(git)
-            for k, t in enumerate(traces):
-                t.iteration = git  # globalize
-                if epoch_mode == "single":
-                    iter_epochs.append((0, git))
-                elif kernel in TWO_RUN_KERNELS:
-                    iter_epochs.append((run_idx, k))
-                else:
-                    iter_epochs.append((git, 0))
-                git += 1
-            all_traces.extend(traces)
+        with stage("trace_emit"):
+            run_traces = []
+            iter_epochs: List[Tuple[int, int]] = []
+            git = 0
+            run_start_iter = []
+            for run_idx, run in enumerate(runs):
+                rt = trace_run(run, cfg_trace)
+                run_start_iter.append(git)
+                for k in range(rt.num_iters):
+                    if epoch_mode == "single":
+                        iter_epochs.append((0, git))
+                    elif ks.two_run:
+                        iter_epochs.append((run_idx, k))
+                    else:
+                        iter_epochs.append((git, 0))
+                    git += 1
+                run_traces.append(rt)
 
-        block, array_id, iter_id, elem = concat_traces(all_traces)
+            if len(run_traces) == 1:  # single-run kernels: no concat copy
+                rt = run_traces[0]
+                block, array_id, elem = rt.block, rt.array_id, rt.elem
+            else:
+                block = np.concatenate([rt.block for rt in run_traces])
+                array_id = np.concatenate([rt.array_id for rt in run_traces])
+                elem = np.concatenate([rt.elem for rt in run_traces])
+            iter_id = np.concatenate(
+                [
+                    np.repeat(
+                        np.arange(s, s + rt.num_iters, dtype=np.int32),
+                        rt.iter_sizes,
+                    )
+                    for s, rt in zip(run_start_iter, run_traces)
+                ]
+            )
         epoch_id = np.asarray(
             [iter_epochs[i][0] for i in range(git)], dtype=np.int32
         )[iter_id]
@@ -325,7 +353,7 @@ def _build_workload(
         )
 
     eval_from = 0
-    if kernel in TWO_RUN_KERNELS and len(runs) > 1:
+    if ks.two_run and len(runs) > 1:
         # Evaluate on the second (post-change) run only.
         second_first_iter = run_start_iter[1]
         eval_from = int(np.searchsorted(iter_id, second_first_iter))
@@ -350,27 +378,3 @@ def _build_workload(
         eval_from_pos=eval_from,
         session=sess,
     )
-
-
-def run_prefetcher_suite(
-    workload: WorkloadTrace,
-    prefetchers: Dict[str, Callable[[WorkloadTrace], PrefetchStream]],
-) -> Dict[str, PrefetchMetrics]:
-    """Deprecated shim: score each prefetcher against the baseline run.
-
-    Use :class:`repro.core.experiment.Experiment` instead — it owns workload
-    construction, caches traces across prefetchers, and returns a structured
-    result over the full evaluation grid.
-    """
-    warnings.warn(
-        "run_prefetcher_suite is deprecated; use repro.core.Experiment "
-        "(or repro.core.experiment.score_prefetcher for a single stream)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.core.experiment import score_prefetcher
-
-    return {
-        name: score_prefetcher(workload, name, gen)
-        for name, gen in prefetchers.items()
-    }

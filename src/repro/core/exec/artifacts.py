@@ -42,6 +42,7 @@ from typing import Optional
 import numpy as np
 
 import repro.core.driver as _driver
+from repro.apps.registry import kernel_traits
 from repro.apps.trace import TraceConfig
 from repro.core.driver import WorkloadSpec, WorkloadTrace, make_session
 from repro.memsim.hierarchy import DemandProfile, PrefetchOutcome
@@ -95,12 +96,22 @@ class ArtifactCache:
         non-``WorkloadSpec`` types the class names are folded in too, so
         two spec types can never collide on identical field dicts, while
         plain ``WorkloadSpec`` keys stay byte-stable across this change.
+
+        The kernel's traversal-direction mode (from its
+        :class:`~repro.apps.registry.KernelSpec`) is folded in for
+        non-push kernels: a registry change that re-points a kernel name
+        at a different direction moves its artifacts instead of serving a
+        stale traversal pattern.  Push kernels (every pre-registry
+        kernel) keep byte-stable keys.
         """
         doc = {
             "artifact_schema": ARTIFACT_SCHEMA,
             "trace_code_version": _driver.TRACE_CODE_VERSION,
             "spec": dataclasses.asdict(spec),
         }
+        direction = kernel_traits(spec.kernel).direction
+        if direction != "push":
+            doc["direction"] = direction
         if type(spec) is not WorkloadSpec:
             doc["spec_type"] = type(spec).__name__
             churn = getattr(spec, "churn", None)

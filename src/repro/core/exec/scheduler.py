@@ -189,6 +189,7 @@ def _spawn_pool(
     jax_cache = os.environ.get(
         "JAX_COMPILATION_CACHE_DIR", str(artifacts.root / "jax-cache")
     )
+    from repro.apps.trace import EMITTER_ENV, current_emitter
     from repro.memsim.engine import ENGINE_ENV, current_engine
 
     child_env = {
@@ -199,6 +200,9 @@ def _spawn_pool(
             "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0"
         ),
         ENGINE_ENV: current_engine(),
+        # Same story for the trace-emitter selection (set_emitter /
+        # use_emitter overrides live in parent process-local state).
+        EMITTER_ENV: current_emitter(),
     }
     saved_env = {k: os.environ.get(k) for k in child_env}
     os.environ.update(child_env)

@@ -19,9 +19,12 @@ resolution of prefetcher names, and composite (next-line + X) scoring of
 every grid cell.  The structured :class:`ExperimentResult` returns tidy
 per-cell rows ready for JSON dumps or figure assembly.
 
-Scoring one stream is :func:`score_prefetcher` — the single code path also
-used by the deprecated ``run_prefetcher_suite`` shim, so legacy results are
-bit-identical to ``Experiment`` results.
+Scoring one stream is :func:`score_prefetcher` — the single code path for
+every caller (grid cells, stream epochs, ad-hoc scoring), so results are
+comparable everywhere.  Kernel names — including direction variants like
+``bfs_do`` and ``pgd_pull`` — resolve through the declarative kernel
+registry (:mod:`repro.apps.registry`); dataset and prefetcher names through
+theirs.
 """
 from __future__ import annotations
 

@@ -24,17 +24,12 @@ budget, family, and composite policy as a declarative
     gen = get_prefetcher("vldp").instantiate()          # baselines
     gen = get_prefetcher("amc").instantiate(lookahead_accesses=30)  # configurable
 
-Deprecation policy
-------------------
-``SUITE`` (the bare name->callable dict) and
-``repro.core.run_prefetcher_suite`` are deprecated in favor of the registry
-and :class:`repro.core.Experiment`.  They remain as thin shims that emit
-``DeprecationWarning`` and delegate to the new code path (so results are
-identical), and will be removed once no in-repo caller or test depends on
-them — new code must not add SUITE entries; register instead.
+The PR-1 deprecation shims (``SUITE``, ``repro.core.run_prefetcher_suite``)
+have been removed per their stated policy — no in-repo caller or test
+depends on them anymore.  Resolve prefetchers by name through the registry
+and score through :class:`repro.core.Experiment` or
+:func:`repro.core.experiment.score_prefetcher`.
 """
-import warnings
-
 from repro.core.prefetchers.simple import nextline_extra, droplet_model, ideal_l2
 from repro.core.prefetchers.temporal import isb, misb, domino
 from repro.core.prefetchers.spatial import vldp, bingo
@@ -45,25 +40,6 @@ import repro.core.amc.prefetcher  # noqa: F401
 
 # The seven Table I baselines, in the paper's presentation order.
 BASELINE_NAMES = ("vldp", "bingo", "isb", "misb", "rnr", "domino", "prodigy")
-
-
-def _suite():
-    from repro.core.registry import get_prefetcher
-
-    return {n: get_prefetcher(n).instantiate() for n in BASELINE_NAMES}
-
-
-def __getattr__(name):
-    if name == "SUITE":
-        warnings.warn(
-            "repro.core.prefetchers.SUITE is deprecated; resolve prefetchers "
-            "by name through repro.core.registry.get_prefetcher or pass names "
-            "to repro.core.Experiment",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return _suite()
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
@@ -77,5 +53,4 @@ __all__ = [
     "bingo",
     "rnr",
     "BASELINE_NAMES",
-    "SUITE",
 ]

@@ -55,6 +55,30 @@ class CSRGraph:
             np.arange(self.num_vertices, dtype=np.int32), self.degrees
         )
 
+    def transpose(self) -> "CSRGraph":
+        """The CSC view: in-edges of this graph as a CSR graph over the
+        same vertex id space (row ``d`` lists the sources of ``d``'s
+        in-edges; weights are carried per edge).
+
+        Pull-mode (dense) EDGEMAP traverses this view — destinations scan
+        their in-edge rows sequentially and gather source properties.  The
+        transpose is built once per graph and cached on the instance, so
+        every pull step and the pull-mode tracer share one CSC build.
+        """
+        t = self.__dict__.get("_transpose")
+        if t is None:
+            src = self.edge_sources()
+            t = from_edges(
+                self.neighbors,
+                src,
+                self.num_vertices,
+                weights=self.weights,
+                dedup=False,
+                name=self.name + "^T",
+            )
+            object.__setattr__(self, "_transpose", t)
+        return t
+
     def device(self):
         """Return (offsets, neighbors, weights, edge_src) as jnp arrays."""
         assert jnp is not None, "jax not available"

@@ -125,6 +125,11 @@ def road_graph(
 # stream-protocol tests and the CI streaming smoke (seconds, not minutes).
 DATASETS: Dict[str, dict] = {
     "tiny": dict(kind="powerlaw", n=3_000, m=9_000, gamma=2.2, seed=21),
+    # "tinyroad" is the long-horizon fast cell: a pure 2-D lattice (no
+    # shortcuts) whose huge diameter drives traversal kernels through
+    # hundreds of small frontiers — the regime where whole-run batched
+    # trace emission beats the per-iteration path hardest (bench-gated).
+    "tinyroad": dict(kind="road", n=20_000, shortcut_frac=0.0, seed=18),
     "amazon": dict(kind="rmat", n=50_000, m=424_000, a=0.57, seed=11),
     "stanford": dict(kind="rmat", n=35_000, m=289_000, a=0.65, seed=12),
     "youtube": dict(kind="powerlaw", n=145_000, m=374_000, gamma=2.1, seed=13),
@@ -162,7 +167,12 @@ def make_dataset(name: str, weighted: bool = False, seed_offset: int = 0) -> CSR
     elif kind == "powerlaw":
         g = powerlaw_graph(spec["n"], spec["m"], gamma=spec["gamma"], seed=spec["seed"], name=name)
     elif kind == "road":
-        g = road_graph(spec["n"], seed=spec["seed"], name=name)
+        g = road_graph(
+            spec["n"],
+            shortcut_frac=spec.get("shortcut_frac", 0.05),
+            seed=spec["seed"],
+            name=name,
+        )
     else:  # pragma: no cover
         raise ValueError(kind)
     if weighted:

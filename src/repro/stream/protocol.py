@@ -40,10 +40,9 @@ from typing import ClassVar, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.apps import KERNELS
+from repro.apps import get_kernel, has_kernel, list_kernels
 from repro.apps.trace import TraceConfig
 from repro.core.driver import (
-    TWO_RUN_KERNELS,
     WorkloadTrace,
     _build_workload,
     make_session,
@@ -107,9 +106,10 @@ class StreamSpec:
         _validate_elem_sizes(self.target_elem_size, self.frontier_elem_size)
 
     def validate_names(self) -> None:
-        if self.kernel not in KERNELS:
+        if not has_kernel(self.kernel):
             raise ValueError(
-                f"unknown kernel {self.kernel!r}; available: {sorted(KERNELS)}"
+                f"unknown kernel {self.kernel!r}; "
+                f"available: {sorted(list_kernels())}"
             )
         if self.dataset not in DATASETS:
             raise ValueError(
@@ -194,7 +194,7 @@ _SEQ_CACHE: Dict[tuple, SnapshotSequence] = {}
 def _sequence_for(
     kernel: str, dataset: str, churn, epochs: int, seed: int
 ) -> SnapshotSequence:
-    weighted = kernel == "bellmanford"
+    weighted = get_kernel(kernel).weighted
     key = (dataset, weighted, churn, epochs, seed)
     if key not in _SEQ_CACHE:
         base = make_dataset(dataset, weighted=weighted)
@@ -204,18 +204,18 @@ def _sequence_for(
 
 def _run_epoch(kernel: str, seq: SnapshotSequence, epoch: int):
     """One kernel run on snapshot ``epoch`` (shared root for traversals)."""
-    fn = KERNELS[kernel]
+    ks = get_kernel(kernel)
     g = seq.graphs[epoch]
     mask = seq.masks[epoch]
-    if kernel in TWO_RUN_KERNELS:
+    root = None
+    if ks.needs_root:
         from repro.apps.bfs import pick_root
 
         # The paper's BFS caveat, stretched to E epochs: one root, present
         # in every epoch, so the traversals stay correlated end to end.
         always = np.logical_and.reduce(seq.masks)
         root = pick_root(seq.graphs[0], always if always.any() else seq.masks[0])
-        return fn(g, present_mask=mask, root=root)
-    return fn(g, present_mask=mask)
+    return ks.run(g, present_mask=mask, root=root)
 
 
 # --------------------------------------------------------------- scoring

@@ -182,19 +182,13 @@ def test_amc_session_rejects_non_divisible_elem_sizes():
 
 @pytest.mark.slow
 def test_amc_end_to_end_beats_baselines():
-    from repro.core import build_workload, run_prefetcher_suite
-    from repro.core.prefetchers import SUITE
+    from repro.core import build_workload, get_prefetcher
+    from repro.core.experiment import score_prefetcher
 
     w = build_workload("pgd", "comdblp")
-    res = run_prefetcher_suite(
-        w,
-        {
-            "amc": AMCPrefetcher(AMCConfig()).generate,
-            "vldp": SUITE["vldp"],
-            "rnr": SUITE["rnr"],
-        },
-    )
-    amc, vldp, rnr = res["amc"], res["vldp"], res["rnr"]
+    amc = score_prefetcher(w, "amc", AMCPrefetcher(AMCConfig()).generate)
+    vldp = score_prefetcher(w, "vldp", get_prefetcher("vldp").instantiate())
+    rnr = score_prefetcher(w, "rnr", get_prefetcher("rnr").instantiate())
     assert amc.accuracy > 0.45
     assert amc.coverage > 0.3
     assert amc.speedup > 1.1

@@ -1,9 +1,9 @@
 """The declarative Experiment API + prefetcher registry.
 
 Covers: registration/lookup/duplicate-name errors, grid construction,
-workload-cache reuse across prefetchers and experiments, and shim
-equivalence — the deprecated ``run_prefetcher_suite`` path must produce the
-same PrefetchMetrics as ``Experiment`` for the same workload cell.
+workload-cache reuse across prefetchers and experiments, and path
+equivalence — direct ``score_prefetcher`` scoring must produce the same
+PrefetchMetrics as ``Experiment`` for the same workload cell.
 """
 import numpy as np
 import pytest
@@ -15,8 +15,8 @@ from repro.core import (
     get_prefetcher,
     list_prefetchers,
     register_prefetcher,
-    run_prefetcher_suite,
 )
+from repro.core.experiment import score_prefetcher
 from repro.core.registry import (
     DuplicatePrefetcherError,
     UnknownPrefetcherError,
@@ -78,11 +78,25 @@ def test_resolve_prefetchers_mixed_references():
         resolve_prefetchers(["rnr", "rnr"])
 
 
-def test_suite_shim_matches_registry():
-    with pytest.deprecated_call():
-        from repro.core.prefetchers import SUITE
-    assert list(SUITE) == ["vldp", "bingo", "isb", "misb", "rnr", "domino", "prodigy"]
-    assert SUITE["vldp"] is get_prefetcher("vldp").instantiate()
+def test_deprecated_shims_are_gone():
+    """PR 1's deprecation policy, executed: the SUITE dict and
+    run_prefetcher_suite no longer exist — the registry is the only path."""
+    import repro.core
+    import repro.core.driver
+    import repro.core.prefetchers
+
+    assert not hasattr(repro.core, "run_prefetcher_suite")
+    assert not hasattr(repro.core.driver, "run_prefetcher_suite")
+    with pytest.raises(AttributeError):
+        repro.core.prefetchers.SUITE
+    # The registry still serves the full Table I baseline suite.
+    from repro.core.prefetchers import BASELINE_NAMES
+
+    assert list(BASELINE_NAMES) == [
+        "vldp", "bingo", "isb", "misb", "rnr", "domino", "prodigy",
+    ]
+    for n in BASELINE_NAMES:
+        assert callable(get_prefetcher(n).instantiate())
 
 
 # ------------------------------------------------------------ WorkloadSpec
@@ -190,26 +204,22 @@ def test_experiment_result_is_tidy(cache):
         res.metrics(prefetcher="vldp")
 
 
-def test_experiment_matches_legacy_suite_path():
-    """Acceptance: the declarative grid reproduces the legacy
-    build_workload + run_prefetcher_suite metrics exactly."""
+def test_experiment_matches_direct_scoring():
+    """Acceptance: the declarative grid reproduces direct
+    build_workload + score_prefetcher metrics exactly."""
     from repro.core.amc import AMCConfig, AMCPrefetcher
 
     result = Experiment(
         kernels=["bfs"], datasets=["comdblp"], prefetchers=["amc", "vldp"]
     ).run()
     w = result.workload("bfs", "comdblp")
-    with pytest.deprecated_call():
-        legacy = run_prefetcher_suite(
-            w,
-            {
-                "amc": AMCPrefetcher(AMCConfig()).generate,
-                "vldp": get_prefetcher("vldp").instantiate(),
-            },
-        )
+    direct = {
+        "amc": score_prefetcher(w, "amc", AMCPrefetcher(AMCConfig()).generate),
+        "vldp": score_prefetcher(w, "vldp", get_prefetcher("vldp").instantiate()),
+    }
     for name in ("amc", "vldp"):
         new = result.metrics(prefetcher=name).row()
-        old = legacy[name].row()
+        old = direct[name].row()
         new_info, old_info = new.pop("info"), old.pop("info")
         assert new == old, name
         assert set(new_info) == set(old_info), name

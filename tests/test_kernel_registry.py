@@ -1,0 +1,313 @@
+"""The declarative KernelSpec registry + direction-optimizing traversal +
+whole-run batched trace emission.
+
+Covers: registry metadata/lookup/duplicate errors, the push-vs-pull value
+property (both traversal directions compute the same kernel values on
+randomized graphs), batched-vs-reference emission bit-identity across all
+kernels x directions, the converged-stop (done-flag) iteration counts, the
+vectorized ``TraceConfig.addr`` lookup tables, and the direction variants
+(``bfs_do``, ``pgd_pull``) running end-to-end through ``Experiment`` and
+the stream protocol.
+"""
+import numpy as np
+import pytest
+
+from repro.apps import (
+    bellman_ford,
+    bfs,
+    connected_components,
+    get_kernel,
+    kernel_traits,
+    list_kernels,
+    pagerank_delta,
+    register_kernel,
+    register_kernel_variant,
+)
+from repro.apps.registry import (
+    DuplicateKernelError,
+    KernelSpec,
+    UnknownKernelError,
+)
+from repro.apps.trace import (
+    ARRAYS,
+    NI_ID,
+    P_ID,
+    TraceConfig,
+    current_emitter,
+    set_emitter,
+    trace_run,
+    use_emitter,
+)
+from repro.graphs import from_edges, make_dataset
+
+ALL_KERNELS = ("pgd", "cc", "bfs", "bellmanford")
+VARIANTS = ("bfs_do", "pgd_pull")
+
+
+def _random_graph(seed, n=120, m=500, weighted=False):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, 9, m).astype(np.float32) if weighted else None
+    return from_edges(
+        rng.integers(0, n, m), rng.integers(0, n, m), n, weights=w
+    )
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_kernel_registry_metadata():
+    names = set(list_kernels())
+    assert set(ALL_KERNELS) | set(VARIANTS) <= names
+    assert get_kernel("bellmanford").weighted
+    assert not get_kernel("bfs").weighted
+    for k in ("bfs", "bellmanford", "bfs_do"):
+        spec = get_kernel(k)
+        assert spec.two_run and spec.needs_root
+        assert spec.epoch_protocol == "per_run"
+    for k in ("pgd", "cc", "pgd_pull"):
+        spec = get_kernel(k)
+        assert not spec.two_run
+        assert spec.epoch_protocol == "per_iteration"
+    # variants share the base implementation, differ in direction
+    assert get_kernel("bfs_do").fn is get_kernel("bfs").fn
+    assert get_kernel("bfs_do").direction == "auto"
+    assert get_kernel("pgd_pull").fn is get_kernel("pgd").fn
+    assert get_kernel("pgd_pull").direction == "pull"
+    assert get_kernel("pgd").direction == "push"
+
+
+def test_kernel_registry_errors():
+    with pytest.raises(DuplicateKernelError, match="already registered"):
+
+        @register_kernel("pgd")
+        def other(graph):
+            raise NotImplementedError
+
+    with pytest.raises(UnknownKernelError, match="pgd"):
+        get_kernel("does-not-exist")
+    with pytest.raises(DuplicateKernelError):
+        register_kernel_variant("cc", base="pgd", direction="pull")
+    # spec-level validation
+    with pytest.raises(ValueError, match="direction"):
+        KernelSpec(name="x", fn=lambda g: None, directions=("push",), direction="pull")
+    with pytest.raises(ValueError, match="epoch_protocol"):
+        KernelSpec(name="x", fn=lambda g: None, epoch_protocol="sometimes")
+
+
+def test_kernel_traits_default_for_adhoc_names():
+    t = kernel_traits("my-custom-runs")
+    assert not t.two_run and not t.weighted and t.direction == "push"
+
+
+# ------------------------------------------- push == pull value property
+
+
+def test_push_pull_value_parity_randomized():
+    """Both traversal directions compute the same kernel values: min-based
+    kernels exactly, PGD up to float summation order."""
+    for seed in (0, 1, 2):
+        g = _random_graph(seed)
+        gw = _random_graph(seed, weighted=True)
+        root = int(np.argmax(g.degrees))
+        wroot = int(np.argmax(gw.degrees))
+        np.testing.assert_array_equal(
+            connected_components(g, direction="push").values,
+            connected_components(g, direction="pull").values,
+        )
+        np.testing.assert_array_equal(
+            bfs(g, root=root, direction="push").values,
+            bfs(g, root=root, direction="pull").values,
+        )
+        np.testing.assert_array_equal(
+            bellman_ford(gw, root=wroot, direction="push").values,
+            bellman_ford(gw, root=wroot, direction="pull").values,
+        )
+        np.testing.assert_allclose(
+            pagerank_delta(g, direction="push").values,
+            pagerank_delta(g, direction="pull").values,
+            rtol=1e-4,
+            atol=1e-7,
+        )
+
+
+def test_direction_optimizing_bfs_matches_push():
+    """bfs_do switches direction mid-run but parents are identical (min-id
+    offer wins in every direction), and it genuinely goes dense."""
+    g = make_dataset("tiny")
+    root = int(np.argmax(g.degrees))
+    push = bfs(g, root=root, direction="push")
+    do = bfs(g, root=root, direction="auto")
+    np.testing.assert_array_equal(push.values, do.values)
+    assert [len(f) for f in push.frontiers] == [len(f) for f in do.frontiers]
+    assert "pull" in do.directions and "push" in do.directions
+    assert do.stats["dense_iters"] == do.directions.count("pull")
+    assert set(push.directions) == {"push"}
+
+
+# ------------------------------ batched emission == per-iteration oracle
+
+
+def test_batched_emission_bit_identical_all_kernels_and_directions():
+    g = make_dataset("tiny")
+    fields = ("array_id", "elem", "addr", "block", "src_vertex", "iter_bounds")
+    for name in ALL_KERNELS + VARIANTS:
+        ks = get_kernel(name)
+        gg = make_dataset("tiny", weighted=ks.weighted)
+        for direction in ks.directions:
+            run = ks.run(gg, direction=direction)
+            cfg = TraceConfig(gg.num_vertices, gg.num_edges)
+            assert current_emitter() == "batched"
+            batched = trace_run(run, cfg)
+            with use_emitter("reference"):
+                ref = trace_run(run, cfg)
+            for f in fields:
+                np.testing.assert_array_equal(
+                    getattr(batched, f),
+                    getattr(ref, f),
+                    err_msg=f"{name}/{direction}.{f}",
+                )
+            assert batched.directions == ref.directions == run.directions
+            # per-iteration views slice back out of the flat arrays
+            for i in (0, batched.num_iters - 1):
+                it = batched.iteration(i)
+                assert len(it) == batched.iter_sizes[i]
+
+
+def test_emitter_selection_plumbing():
+    assert current_emitter() == "batched"
+    with use_emitter("reference"):
+        assert current_emitter() == "reference"
+    assert current_emitter() == "batched"
+    set_emitter("reference")
+    try:
+        assert current_emitter() == "reference"
+    finally:
+        set_emitter(None)
+    with pytest.raises(ValueError, match="unknown trace emitter"):
+        set_emitter("fast")
+
+
+def test_pull_trace_structure():
+    """A dense iteration: n-long frontier scan, then per-destination
+    T,V + interleaved in-edge/source-property reads."""
+    g = _random_graph(7)
+    run = pagerank_delta(g, direction="pull", max_iters=2)
+    cfg = TraceConfig(g.num_vertices, g.num_edges)
+    rt = trace_run(run, cfg)
+    it = rt.iteration(0)
+    n, m = g.num_vertices, g.num_edges
+    assert len(it) == 3 * n + 2 * m
+    from repro.apps.trace import F_ID, N_ID, T_ID, V_ID
+
+    # dense frontier scan is sequential over all vertices
+    np.testing.assert_array_equal(it.array_id[:n], np.full(n, F_ID))
+    np.testing.assert_array_equal(it.elem[:n], np.arange(n))
+    assert (it.array_id == T_ID).sum() == n
+    assert (it.array_id == V_ID).sum() == n
+    assert (it.array_id == NI_ID).sum() == m
+    assert (it.array_id == P_ID).sum() == m
+    assert (it.array_id == N_ID).sum() == 0  # pull never touches out-edges
+    # in-edge reads appear in sequential CSC order
+    ni = it.elem[it.array_id == NI_ID]
+    np.testing.assert_array_equal(ni, np.arange(m))
+    # P reads gather the in-edge *sources*
+    t = g.transpose()
+    np.testing.assert_array_equal(
+        it.elem[it.array_id == P_ID], t.neighbors.astype(np.int64)
+    )
+
+
+# ---------------------------------------------------- TraceConfig layout
+
+
+def test_addr_lut_matches_per_array_loop():
+    cfg = TraceConfig(num_vertices=1000, num_edges=5000)
+    rng = np.random.default_rng(0)
+    array_id = rng.integers(0, len(ARRAYS), 5000).astype(np.int8)
+    elem = rng.integers(0, 1000, 5000).astype(np.int64)
+    # the per-array loop this satellite vectorized away
+    ref = np.zeros(len(elem), dtype=np.int64)
+    for aid, (_, esz) in ARRAYS.items():
+        base, _ = cfg.region(aid)
+        sel = array_id == aid
+        ref[sel] = base + elem[sel].astype(np.int64) * esz
+    got = cfg.addr(array_id, elem)
+    assert got.dtype == np.int64
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_ni_region_appended_after_push_arrays():
+    """Appending NI preserved every push-array address; input_bytes stays
+    the paper's V+N+P+F+T footprint (NI is runtime-derived)."""
+    cfg = TraceConfig(num_vertices=1000, num_edges=5000)
+    regions = [cfg.region(a) for a in sorted(ARRAYS)]
+    for (b0, s0), (b1, _) in zip(regions, regions[1:]):
+        assert b0 + s0 <= b1  # disjoint, id-ordered
+    ni_base, ni_size = cfg.region(NI_ID)
+    p_base, p_size = cfg.region(P_ID)
+    assert ni_base > p_base + p_size
+    assert cfg.input_bytes == sum(cfg.region(a)[1] for a in range(NI_ID))
+
+
+# -------------------------------------------- converged-stop (done flag)
+
+
+def test_iteration_counts_unchanged_by_converged_stop():
+    """The done-flag branch now breaks instead of evaluating an extra
+    host-side step; iteration counts for the four paper kernels must match
+    the pre-fix values (recorded on this commit's parent)."""
+    expected = {"pgd": 11, "cc": 12, "bfs": 12, "bellmanford": 15}
+    for name, want in expected.items():
+        ks = get_kernel(name)
+        g = make_dataset("comdblp", weighted=ks.weighted)
+        run = ks.run(g)
+        assert run.num_iters == want, name
+        assert len(run.frontiers) == run.num_iters
+
+
+# ------------------------------------------------- end-to-end scenarios
+
+
+def test_direction_variants_run_through_experiment():
+    from repro.core import Experiment
+
+    res = Experiment(
+        kernels=["bfs_do", "pgd_pull"],
+        datasets=["tiny"],
+        prefetchers=["nextline2", "rnr"],
+    ).run()
+    assert len(res.cells) == 4
+    for cell in res.cells:
+        assert np.isfinite(cell.metrics.speedup)
+    w = res.workload("bfs_do", "tiny")
+    # the trace really contains pull-mode accesses
+    assert (w.array_id == NI_ID).any()
+    assert w.eval_from_pos > 0  # two-run protocol inherited from bfs
+
+
+def test_direction_kernel_artifact_keys_distinct(tmp_path):
+    """bfs and bfs_do must never collide in the artifact cache; push
+    kernels keep their pre-registry key material."""
+    import json
+
+    from repro.core import WorkloadSpec
+    from repro.core.exec.artifacts import ArtifactCache
+
+    cache = ArtifactCache(tmp_path)
+    k_bfs = cache.key(WorkloadSpec("bfs", "tiny"))
+    k_do = cache.key(WorkloadSpec("bfs_do", "tiny"))
+    assert k_bfs != k_do
+    assert "direction" not in json.loads(k_bfs)
+    assert json.loads(k_do)["direction"] == "auto"
+
+
+def test_direction_variant_runs_through_stream_protocol():
+    from repro.core.registry import resolve_prefetchers
+    from repro.stream import SlidingWindow, StreamSpec
+    from repro.stream.protocol import run_stream
+
+    spec = StreamSpec("bfs_do", "tiny", SlidingWindow(), epochs=2)
+    result = run_stream(spec, resolve_prefetchers(["nextline2"]))
+    assert len(result.cells) == 2
+    for c in result.cells:
+        assert np.isfinite(c.metrics.speedup)

@@ -2,8 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.core import build_workload, run_prefetcher_suite
-from repro.core.prefetchers import SUITE
+from repro.core import build_workload, get_prefetcher
+from repro.core.experiment import score_prefetcher
+from repro.core.prefetchers import BASELINE_NAMES
 from repro.core.prefetchers.simple import ideal_l2
 from repro.core.prefetchers.spatial import _majority_table, _window_dedupe
 from repro.core.prefetchers.temporal import _issue_with_hwm
@@ -43,13 +44,13 @@ def test_bfs_workload_evaluates_second_run():
 
 
 def test_ideal_prefetcher_dominates(workload):
-    res = run_prefetcher_suite(workload, {"ideal": ideal_l2})
-    m = res["ideal"]
+    m = score_prefetcher(workload, "ideal", ideal_l2)
     assert m.coverage > 0.9 and m.accuracy > 0.9 and m.speedup > 1.2
 
 
 def test_all_baselines_produce_valid_streams(workload):
-    for name, gen in SUITE.items():
+    for name in BASELINE_NAMES:
+        gen = get_prefetcher(name).instantiate()
         stream = gen(workload)
         assert len(stream.blocks) == len(stream.pos), name
         if len(stream.pos):
@@ -86,7 +87,6 @@ def test_rnr_records_once_amc_rerecords():
     from repro.core.prefetchers.rnr import rnr
 
     w = build_workload("pgd", "comdblp")
-    res = run_prefetcher_suite(
-        w, {"amc": AMCPrefetcher(AMCConfig()).generate, "rnr": rnr}
-    )
-    assert res["amc"].coverage > 2 * res["rnr"].coverage
+    amc = score_prefetcher(w, "amc", AMCPrefetcher(AMCConfig()).generate)
+    rnr_m = score_prefetcher(w, "rnr", rnr)
+    assert amc.coverage > 2 * rnr_m.coverage
