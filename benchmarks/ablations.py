@@ -67,7 +67,7 @@ def main():
         prefetchers=[(name, gen) for _, _, name, gen in variants],
         cache=WorkloadCache(artifacts=ArtifactCache(args.cache_dir)),
     ).run(  # incremental progress; detailed rows printed below
-        verbose=True, workers=args.workers if args.workers > 1 else None
+        verbose=True, workers=args.workers
     )
     w = result.workload(args.kernel, args.dataset)
 

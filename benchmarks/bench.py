@@ -18,6 +18,14 @@ runs (including the long-horizon ``tinyroad`` traversal where the batched
 pass wins hardest), and a ``bfs_do`` (direction-optimizing BFS) cell in
 the full grid so pull-mode traces ride the whole pipeline.
 
+Schema v5 adds the serving-subsystem section: K in {1, 4} concurrent
+tenants (mixed kernels x seeds on ``tiny``) interleaved over one shared
+LLC with both AMC table modes, reporting a queries/sec throughput cell
+(K tenants / warm wall-clock at the fixed hierarchy), the serving stage
+breakdown (``serve_interleave`` / ``serve_llc`` / ``serve_score``), and a
+serial-vs-workers parity gate wired into the exit code like the
+grid/stream gates.
+
 The dated JSONs accumulate as the repo's machine-readable perf trajectory;
 CI runs ``--smoke`` (1 kernel x 1 dataset x 3 prefetchers) on every push,
 uploads the JSON as a build artifact, and fails this script (exit 1) when
@@ -47,7 +55,7 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 # Three prefetchers spanning the suite's families: the paper's contribution
 # (amc), a spatial baseline (vldp), and a replay baseline (rnr).  The
@@ -62,6 +70,19 @@ SMOKE_CELLS = [("pgd", "comdblp", 0)]
 # table_carry) and parity-gated serial vs workers=2.
 STREAM_EPOCHS = 3
 STREAM_PREFETCHERS = ["amc", "nextline2"]
+# The serving-subsystem cells (schema v5): K concurrent query tenants on
+# the tiny dataset — mixed kernels and seeds so shared-table aliasing has
+# cross-tenant material — timed cold and warm (queries/sec = K / warm
+# seconds at the fixed SCALED hierarchy) and parity-gated serial vs
+# workers=2.
+SERVE_TENANT_COUNTS = [1, 4]
+SERVE_TENANTS = [
+    ("pgd", "tiny", 0),
+    ("cc", "tiny", 0),
+    ("pgd", "tiny", 1),
+    ("cc", "tiny", 1),
+]
+SERVE_PREFETCHERS = ["amc", "nextline2"]
 # (kernel, dataset, seed) cells on comdblp, both app protocols.  The
 # seed-varied bfs/bellmanford cells are distinct evolving-graph trials
 # (each seed draws a different §VI run1->run2 evolution), and their
@@ -95,7 +116,10 @@ def _grid_seconds(specs, pairs, cache_dir, workers):
     cache = WorkloadCache(artifacts=ArtifactCache(cache_dir))
     exp = Experiment(workloads=specs, prefetchers=pairs, cache=cache)
     t0 = time.perf_counter()
-    result = exp.run(workers=workers if workers > 1 else None)
+    # workers is always explicit here: workers=1 pins the serial reference
+    # path (the default workers=None would auto-parallelize on multi-core
+    # hosts and corrupt the serial baselines/parity gates).
+    result = exp.run(workers=workers)
     return time.perf_counter() - t0, result
 
 
@@ -333,6 +357,62 @@ def main(argv=None) -> int:
                 "from serial",
                 file=sys.stderr,
             )
+
+        # --- serving subsystem (schema v5): K concurrent tenants on one
+        # shared LLC, throughput (queries/sec) + a parity gate of its own.
+        from repro.serve import ServeSpec, TenantSpec
+
+        serve_pairs = resolve_prefetchers(SERVE_PREFETCHERS)
+        serve_by_tenants = {}
+        for n_tenants in SERVE_TENANT_COUNTS:
+            tenants = tuple(
+                TenantSpec(k, d, seed=s)
+                for k, d, s in SERVE_TENANTS[:n_tenants]
+            )
+            serve_spec = ServeSpec(tenants=tenants)
+            print(f"[bench] serve: K={n_tenants} tenants on tiny, cold")
+            serve_stages: dict = {}
+            with collect_stages(into=serve_stages):
+                serve_cold_s, serve_result = _grid_seconds(
+                    [serve_spec], serve_pairs, cache_dir, 1
+                )
+            serve_rows = serve_result.rows()
+            serve_warm_s, _ = _grid_seconds(
+                [serve_spec], serve_pairs, cache_dir, 1
+            )
+            _, serve_par = _grid_seconds(
+                [serve_spec], serve_pairs, cache_dir, 2
+            )
+            serve_same = rows_equal(serve_rows, serve_par.rows())
+            parity = parity and serve_same
+            qps = n_tenants / serve_warm_s if serve_warm_s > 0 else 0.0
+            print(
+                f"[bench] serve K={n_tenants}: cold {serve_cold_s:.1f}s "
+                f"warm {serve_warm_s:.1f}s ({qps:.2f} queries/s, "
+                f"parity {'ok' if serve_same else 'FAILED'})"
+            )
+            if not serve_same:
+                print(
+                    f"[bench] PARITY FAILURE: serve K={n_tenants} workers=2 "
+                    "results diverge from serial",
+                    file=sys.stderr,
+                )
+            serve_by_tenants[str(n_tenants)] = {
+                "tenants": [
+                    f"{k}/{d}#s{s}" for k, d, s in SERVE_TENANTS[:n_tenants]
+                ],
+                "stages_s": {
+                    "serve_interleave": serve_stages.get("serve_interleave", 0.0),
+                    "serve_llc": serve_stages.get("serve_llc", 0.0),
+                    "serve_score": serve_stages.get("serve_score", 0.0),
+                },
+                "wallclock_s": {
+                    "serial_cold": serve_cold_s,
+                    "warm_serial": serve_warm_s,
+                },
+                "queries_per_s": qps,
+                "parallel_matches_serial": serve_same,
+            }
     finally:
         if own_cache_dir:
             shutil.rmtree(cache_dir, ignore_errors=True)
@@ -391,6 +471,16 @@ def main(argv=None) -> int:
                 "warm_workers2": stream_warm_s,
             },
             "parallel_matches_serial": stream_parity,
+        },
+        # Schema v5: the serving-subsystem cells (K concurrent tenants
+        # over one shared LLC, both AMC table modes) with the serving
+        # stage timers and the queries/sec throughput figure.
+        "serve": {
+            "dataset": "tiny",
+            "policy": "round_robin",
+            "table_modes": ["per_tenant", "shared"],
+            "prefetchers": SERVE_PREFETCHERS,
+            "by_tenants": serve_by_tenants,
         },
         "parallel_matches_serial": parity,
         "engine_matches_reference": engine_ok,

@@ -9,33 +9,56 @@ from __future__ import annotations
 import glob
 import json
 import os
+import warnings
 from collections import defaultdict
 
 import numpy as np
 
 PF_ORDER = ["amc", "vldp", "bingo", "isb", "misb", "rnr", "ideal"]
 
+# Results-dir schemas with a dedicated loader: load() skips them silently
+# (they are someone else's territory, not an anomaly worth a warning).
+KNOWN_SCHEMAS = {
+    "stream-drift": "load_streams/fig_drift",
+    "serve-contention": "load_serves/fig_contention",
+}
+
 
 def load(results_dir: str = "results"):
     """Per-workload sweep JSONs, keyed by (kernel, dataset).
 
-    The results directory also accumulates stream-protocol drift artifacts
-    (``schema: "stream-drift"``, consumed by :func:`fig_drift`) and may
-    hold future schemas; anything that is not a per-workload sweep
-    document is skipped instead of KeyError-ing downstream.
+    The results directory also accumulates stream-drift and
+    serve-contention artifacts (each with its own loader — see
+    ``KNOWN_SCHEMAS``); those are skipped silently.  Anything *else* that
+    is skipped — corrupt JSON, unknown schema, non-sweep document — gets a
+    warning instead of silence, so a typo'd results file does not quietly
+    vanish from every figure.
     """
     out = {}
     for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
         if os.path.basename(f).startswith(("roofline", "perf")):
-            continue
+            continue  # perf-trajectory artifacts, never sweep documents
         try:
-            r = json.load(open(f))
-        except (OSError, json.JSONDecodeError):
-            continue  # truncated/corrupt file: not this module's problem
-        if not isinstance(r, dict) or r.get("schema") == "stream-drift":
-            continue  # stream artifact (fig_drift territory) or non-document
-        if "kernel" not in r or not isinstance(r.get("prefetchers"), dict):
-            continue  # not a per-workload sweep document
+            with open(f) as fh:
+                r = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            warnings.warn(f"figures.load: skipping unreadable {f}: {e}")
+            continue
+        if isinstance(r, dict) and r.get("schema") in KNOWN_SCHEMAS:
+            continue  # another loader's schema (see KNOWN_SCHEMAS)
+        if (
+            not isinstance(r, dict)
+            or "kernel" not in r
+            or not isinstance(r.get("prefetchers"), dict)
+        ):
+            what = (
+                r.get("schema") if isinstance(r, dict) else type(r).__name__
+            )
+            warnings.warn(
+                f"figures.load: skipping {f}: not a per-workload sweep "
+                f"document (schema={what!r})"
+            )
+            continue
         out[(r["kernel"], r["dataset"])] = r
     return out
 
@@ -103,6 +126,90 @@ def fig_drift(streams):
         derived["persist_minus_reset_tail_coverage"] = float(
             np.mean(persist) - np.mean(reset)
         )
+    return headers, rows, derived
+
+
+def load_serves(results_dir: str = "results"):
+    """Serve-contention JSONs (repro.serve.protocol.contention_payload
+    documents), keyed by (tenant summary, policy)."""
+    out = {}
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        try:
+            with open(f) as fh:
+                r = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if not isinstance(r, dict) or r.get("schema") != "serve-contention":
+            continue
+        tenants = "+".join(
+            f"{t['kernel']}/{t['dataset']}#s{t['seed']}" for t in r["tenants"]
+        )
+        out[(tenants, r.get("policy", "?"))] = r
+    return out
+
+
+def fig_contention(serves):
+    """Per-tenant accuracy/coverage under shared-LLC interleaving, per
+    table mode — the serving subsystem's headline figure: how far the
+    shared AMC table falls below per-tenant provisioning (the paper's
+    correlation-aliasing failure mode at serving scale)."""
+    headers = [
+        "scenario",
+        "prefetcher",
+        "table_mode",
+        "coverage_by_tenant",
+        "accuracy_by_tenant",
+        "mean_coverage",
+        "mean_accuracy",
+        "aliased_hits",
+        "cross_tenant_overwrites",
+        "llc_hits_lost",
+    ]
+    rows = []
+    derived = {}
+    for (tenants, policy), r in sorted(serves.items()):
+        # Tenant mix in the label: same-K scenarios must not collide.
+        scenario = f"K={r['num_tenants']}[{policy}]{tenants}"
+        for pf, modes in sorted(r["prefetchers"].items()):
+            for mode, doc in sorted(modes.items()):
+                t_rows = doc["per_tenant_rows"]
+                serve_infos = [t.get("serve") or {} for t in t_rows]
+                st = [s.get("shared_table", {}) for s in serve_infos]
+                rows.append(
+                    [
+                        scenario,
+                        pf,
+                        mode,
+                        [round(t["coverage"], 3) for t in t_rows],
+                        [round(t["accuracy"], 3) for t in t_rows],
+                        round(doc["mean_coverage"], 3),
+                        round(doc["mean_accuracy"], 3),
+                        sum(s.get("aliased_hits", 0) for s in st),
+                        st[0].get("cross_tenant_overwrites", 0) if st else 0,
+                        sum(
+                            s.get("llc_demand_hits_lost", 0)
+                            + s.get("llc_pf_hits_lost", 0)
+                            for s in serve_infos
+                        ),
+                    ]
+                )
+                derived[f"mean_coverage/{scenario}/{pf}[{mode}]"] = doc[
+                    "mean_coverage"
+                ]
+                derived[f"mean_accuracy/{scenario}/{pf}[{mode}]"] = doc[
+                    "mean_accuracy"
+                ]
+        # The headline: per-tenant minus shared, per prefetcher with both.
+        for pf, modes in r["prefetchers"].items():
+            if "per_tenant" in modes and "shared" in modes:
+                derived[f"table_isolation_coverage_gain/{scenario}/{pf}"] = (
+                    modes["per_tenant"]["mean_coverage"]
+                    - modes["shared"]["mean_coverage"]
+                )
+                derived[f"table_isolation_accuracy_gain/{scenario}/{pf}"] = (
+                    modes["per_tenant"]["mean_accuracy"]
+                    - modes["shared"]["mean_accuracy"]
+                )
     return headers, rows, derived
 
 

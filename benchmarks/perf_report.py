@@ -1,31 +1,109 @@
-"""Perf-iteration scorecard: baseline vs final roofline, per cell.
+"""Perf-trajectory scorecard: BENCH stage rollup + optional roofline delta.
 
     PYTHONPATH=src python -m benchmarks.perf_report
 
-Reads results/roofline_baseline.json (snapshot taken before the §5 perf
-iterations) and the current dry-run/probe artifacts, writes
-results/roofline_final.md with both tables + the delta table.
+Reads every dated ``BENCH_*.json`` at the repo root and rolls the stage
+timers up into one trajectory table — one column per run, one row per
+stage key.  The rollup takes the UNION of stage keys found in the
+documents (top-level ``stages_s`` including nested cache-pass/score
+dicts, the stream subsystem's ``update_apply``/``trace_epoch``/
+``table_carry`` stages, and the serving subsystem's ``serve_interleave``/
+``serve_llc``/``serve_score`` stages per tenant count), so a stage added
+by a newer schema shows up instead of being silently dropped; older
+documents that predate a stage simply show ``-``.
+
+If ``results/roofline_baseline.json`` exists (snapshot taken before the
+§5 perf iterations), the report also re-derives the current roofline and
+appends the baseline-vs-final delta table; without the baseline the
+roofline section is skipped with a note rather than crashing.
+
+Writes ``results/perf_report.md`` and prints it.
 """
 from __future__ import annotations
 
+import glob
 import json
+import os
 import sys
 
 
-def main():
-    sys.path.insert(0, "src")
+def flatten_stages(doc: dict) -> dict:
+    """One BENCH document -> flat {stage_key: seconds}.
+
+    Walks the actual keys present (recursing into nested dicts like
+    ``cache_pass`` / ``score``), so unknown or future stage names are
+    carried through instead of dropped.
+    """
+    flat: dict = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}.{k}" if prefix else k, v)
+        elif isinstance(node, (int, float)):
+            flat[prefix] = float(node)
+
+    walk("", doc.get("stages_s", {}))
+    # Subsystem stage breakdowns live under their own sections.
+    walk("stream", doc.get("stream", {}).get("stages_s", {}))
+    for n_tenants, sub in sorted(
+        doc.get("serve", {}).get("by_tenants", {}).items()
+    ):
+        walk(f"serve[K={n_tenants}]", sub.get("stages_s", {}))
+    return flat
+
+
+def bench_trajectory(root: str = ".") -> tuple[list, list, list]:
+    """(run labels, union of stage keys, per-run flat dicts)."""
+    labels, flats = [], []
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        try:
+            doc = json.load(open(path))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[perf_report] skipping unreadable {path}: {e}", file=sys.stderr)
+            continue
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        labels.append(name + (" (smoke)" if doc.get("smoke") else ""))
+        flats.append(flatten_stages(doc))
+    keys: list = []
+    for flat in flats:  # union, first-seen order
+        for k in flat:
+            if k not in keys:
+                keys.append(k)
+    return labels, keys, flats
+
+
+def rollup_markdown(labels, keys, flats) -> str:
+    lines = [
+        "| stage | " + " | ".join(labels) + " |",
+        "|---|" + "---|" * len(labels),
+    ]
+    for k in keys:
+        cells = [
+            f"{flat[k]:.3f}" if k in flat else "-" for flat in flats
+        ]
+        lines.append(f"| {k} | " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
     from repro.launch import roofline
 
     rows = roofline.table()
     with open("results/roofline.json", "w") as f:
         json.dump(rows, f, indent=1)
 
-    base = {
-        (r["arch"], r["shape"]): r
-        for r in json.load(open("results/roofline_baseline.json"))
-    }
-    cur = {(r["arch"], r["shape"]): r for r in rows}
+    baseline_path = "results/roofline_baseline.json"
+    if not os.path.exists(baseline_path):
+        return (
+            "# Roofline\n\n"
+            f"(no {baseline_path} snapshot — delta table skipped; current "
+            "model written to results/roofline.json)\n\n"
+            + roofline.markdown(rows)
+        )
 
+    base = {(r["arch"], r["shape"]): r for r in json.load(open(baseline_path))}
+    cur = {(r["arch"], r["shape"]): r for r in rows}
     lines = [
         "# Roofline — final (post §5 perf iterations), 16x16 single-pod\n",
         roofline.markdown(rows),
@@ -44,8 +122,26 @@ def main():
             f"| {key[0]}/{key[1]} | {b['dominant']} {bt:.3e} | "
             f"{c['dominant']} {ct:.3e} | {red:.2f}x |"
         )
-    out = "\n".join(lines)
-    with open("results/roofline_final.md", "w") as f:
+    return "\n".join(lines)
+
+
+def main():
+    sys.path.insert(0, "src")
+
+    sections = []
+    labels, keys, flats = bench_trajectory()
+    if labels:
+        sections.append(
+            "# BENCH stage trajectory (seconds per run)\n\n"
+            + rollup_markdown(labels, keys, flats)
+        )
+    else:
+        sections.append("# BENCH stage trajectory\n\n(no BENCH_*.json found)")
+    sections.append(roofline_section())
+
+    out = "\n\n".join(sections) + "\n"
+    os.makedirs("results", exist_ok=True)
+    with open("results/perf_report.md", "w") as f:
         f.write(out)
     print(out)
 

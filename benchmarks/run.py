@@ -100,6 +100,23 @@ def main() -> None:
         figures.table8_storage()
         print("table8_storage,0,static accounting (see EXPERIMENTS.md)")
 
+    # subsystem figures from their own results-dir schemas
+    for name, loader, fn in [
+        ("fig_drift", figures.load_streams, figures.fig_drift),
+        ("fig_contention", figures.load_serves, figures.fig_contention),
+    ]:
+        docs = loader()
+        if not docs:
+            print(f"{name},0,no results (run the matching example first)")
+            continue
+        t0 = time.perf_counter()
+        headers, rows, derived = fn(docs)
+        us = (time.perf_counter() - t0) * 1e6
+        key_items = ";".join(
+            f"{k}={v:.3f}" for k, v in list(derived.items())[:6]
+        )
+        print(f"{name},{us:.0f},{key_items}")
+
     # roofline summary from dry-run cells
     try:
         from repro.launch import roofline

@@ -142,10 +142,12 @@ def main():
             result = grid_result
         else:
             # Serial: one experiment per workload, written as it finishes,
-            # so an interrupted sweep keeps every completed JSON.
+            # so an interrupted sweep keeps every completed JSON.  workers=1
+            # pins the serial path (a single-workload grid would stay serial
+            # under the auto default too; explicit is clearer).
             result = Experiment(
                 workloads=[spec], prefetchers=names, cache=cache
-            ).run()
+            ).run(workers=1)
         w = cache.get_or_build(spec)
         out = workload_payload(w, result, spec, names)
         with open(path, "w") as f:

@@ -1,0 +1,182 @@
+"""Multi-tenant serving demo: K concurrent query traces, one shared LLC.
+
+Runs K tenant workloads (default: a 3-tenant mixed kernel/seed scenario on
+comdblp) interleaved onto a shared LLC, scoring AMC under both table modes
+— ``per_tenant`` (private correlation tables, the provisioned-isolation
+upper bound) and ``shared`` (one table store for everyone, the
+correlation-aliasing failure mode) — alongside stateless baselines, and
+writes the contention JSON (``serve-contention`` schema, consumed by
+``benchmarks/figures.fig_contention``).
+
+    PYTHONPATH=src python examples/serving_contention.py
+    PYTHONPATH=src python examples/serving_contention.py --tiny   # CI smoke
+    PYTHONPATH=src python examples/serving_contention.py --verify-parallel
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import Experiment, WorkloadCache  # noqa: E402
+from repro.core.exec.artifacts import ArtifactCache  # noqa: E402
+from repro.core.exec.scheduler import rows_equal  # noqa: E402
+from repro.serve import (  # noqa: E402
+    TABLE_MODES,
+    ServeCell,
+    ServeSpec,
+    TenantSpec,
+    contention_payload,
+)
+
+
+def parse_tenants(s: str):
+    """``kernel:dataset:seed[:rate]`` comma list -> TenantSpecs."""
+    tenants = []
+    for part in s.split(","):
+        bits = part.split(":")
+        if len(bits) not in (3, 4):
+            raise SystemExit(
+                f"bad tenant {part!r}: expected kernel:dataset:seed[:rate]"
+            )
+        tenants.append(
+            TenantSpec(
+                kernel=bits[0],
+                dataset=bits[1],
+                seed=int(bits[2]),
+                rate=float(bits[3]) if len(bits) == 4 else 1.0,
+            )
+        )
+    return tuple(tenants)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--tenants",
+        default="pgd:comdblp:0,cc:comdblp:0,pgd:comdblp:1",
+        help="comma list of kernel:dataset:seed[:rate] tenant specs",
+    )
+    ap.add_argument("--policy", default="round_robin")
+    ap.add_argument("--prefetchers", default="amc,vldp,nextline2")
+    ap.add_argument(
+        "--table-modes",
+        default=",".join(TABLE_MODES),
+        help="AMC table modes to score (stateless baselines ignore this)",
+    )
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument(
+        "--tiny",
+        action="store_true",
+        help="CI smoke config: K=3 mixed tenants on the tiny dataset, "
+        "amc+nextline2, both table modes",
+    )
+    ap.add_argument(
+        "--verify-parallel",
+        action="store_true",
+        help="re-run with workers=2 and assert byte-identical rows",
+    )
+    ap.add_argument(
+        "--out", default=None, help="contention JSON path (default: results/)"
+    )
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        args.tenants = "pgd:tiny:0,cc:tiny:0,pgd:tiny:1"
+        args.prefetchers = "amc,nextline2"
+
+    tenants = parse_tenants(args.tenants)
+    prefetchers = args.prefetchers.split(",")
+    spec = ServeSpec(
+        tenants=tenants,
+        policy=args.policy,
+        table_modes=tuple(args.table_modes.split(",")),
+    )
+    # One cache: tenant traces are mode/policy-agnostic, so the parity
+    # re-run (and any repeat scenario) shares the same K builds.
+    cache = WorkloadCache(artifacts=ArtifactCache())
+
+    label = "+".join(f"{t.kernel}/{t.dataset}#s{t.seed}" for t in tenants)
+    print(
+        f"=== K={spec.num_tenants} serving [{args.policy}] {label} "
+        f"({', '.join(prefetchers)}) ==="
+    )
+    # Explicit workers: --workers 1 pins the serial reference run that the
+    # --verify-parallel gate compares against.
+    exp = Experiment(workloads=[spec], prefetchers=prefetchers, cache=cache)
+    result = exp.run(workers=args.workers)
+
+    parity = None
+    if args.verify_parallel:
+        par = Experiment(
+            workloads=[spec], prefetchers=prefetchers, cache=cache
+        ).run(workers=2)
+        parity = rows_equal(result.rows(), par.rows())
+        print(f"serial vs workers=2: {'byte-identical' if parity else 'DIVERGED'}")
+
+    wspecs = spec.tenant_workloads()
+    cells = [
+        ServeCell(
+            tenant=c.tenant,
+            prefetcher=c.prefetcher,
+            table_mode=c.table_mode,
+            metrics=c.metrics,
+            spec=wspecs[c.tenant],
+        )
+        for c in result.cells
+    ]
+    doc = contention_payload(spec, cells)
+    if parity is not None:
+        doc["parallel_matches_serial"] = parity
+
+    for name, modes in sorted(doc["prefetchers"].items()):
+        for mode, d in sorted(modes.items()):
+            cov = " ".join(
+                f"{r['coverage']:.2f}" for r in d["per_tenant_rows"]
+            )
+            extras = ""
+            if mode == "shared":
+                st = [
+                    r["serve"].get("shared_table", {})
+                    for r in d["per_tenant_rows"]
+                ]
+                extras = (
+                    f"  aliased {sum(s.get('aliased_hits', 0) for s in st)}"
+                    f"  overwrites "
+                    f"{st[0].get('cross_tenant_overwrites', 0) if st else 0}"
+                )
+            print(
+                f"{name + '[' + mode + ']':>22}: coverage by tenant [{cov}]  "
+                f"mean cov {d['mean_coverage']:.2f}  "
+                f"acc {d['mean_accuracy']:.2f}  "
+                f"speedup {d['mean_speedup']:.2f}{extras}"
+            )
+
+    for name, modes in sorted(doc["prefetchers"].items()):
+        if "per_tenant" in modes and "shared" in modes:
+            gap = (
+                modes["per_tenant"]["mean_coverage"]
+                - modes["shared"]["mean_coverage"]
+            )
+            print(
+                f"{name} per-tenant vs shared tables (mean coverage): "
+                f"{modes['per_tenant']['mean_coverage']:.2f} vs "
+                f"{modes['shared']['mean_coverage']:.2f} (+{gap:.2f} "
+                f"from table isolation)"
+            )
+
+    dataset = tenants[0].dataset
+    out = args.out or os.path.join(
+        "results", f"contention_{dataset}_k{spec.num_tenants}.json"
+    )
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}")
+    return 0 if parity in (None, True) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -75,8 +75,10 @@ def main(argv=None) -> int:
         f"=== {args.epochs}-epoch {args.churn} stream on "
         f"{args.kernel}/{args.dataset} ({', '.join(prefetchers)}) ==="
     )
+    # Explicit workers: --workers 1 pins the serial reference run that the
+    # --verify-parallel gate compares against.
     exp = Experiment(workloads=streams, prefetchers=prefetchers, cache=cache)
-    result = exp.run(workers=args.workers if args.workers > 1 else None)
+    result = exp.run(workers=args.workers)
 
     parity = None
     if args.verify_parallel:

@@ -192,6 +192,25 @@ def _spawn_pool(
     from repro.apps.trace import EMITTER_ENV, current_emitter
     from repro.memsim.engine import ENGINE_ENV, current_engine
 
+    # ``workers`` is the requested shard width; the actual pool never
+    # exceeds the task count or the core count — extra spawned processes
+    # on a saturated host only add import/contention overhead.
+    pool_size = max(1, min(workers, n_tasks, os.cpu_count() or workers))
+    # Pin each worker's intra-op threadpools to its share of the cores.
+    # XLA (and OpenMP/BLAS) size their pools to the *machine*, so P
+    # workers x C-thread pools oversubscribe a C-core host P-fold — the
+    # BENCH_2026-08-01 regression where workers=4 lost to workers=1.
+    threads = max(1, (os.cpu_count() or 1) // pool_size)
+    xla_flags = " ".join(
+        filter(
+            None,
+            [
+                os.environ.get("XLA_FLAGS"),
+                f"--xla_cpu_multi_thread_eigen={'true' if threads > 1 else 'false'}",
+                f"intra_op_parallelism_threads={threads}",
+            ],
+        )
+    )
     child_env = {
         "PYTHONPATH": os.pathsep.join(pythonpath),
         "JAX_COMPILATION_CACHE_DIR": jax_cache,
@@ -199,6 +218,10 @@ def _spawn_pool(
         "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": os.environ.get(
             "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0"
         ),
+        "XLA_FLAGS": xla_flags,
+        "OMP_NUM_THREADS": str(threads),
+        "OPENBLAS_NUM_THREADS": str(threads),
+        "MKL_NUM_THREADS": str(threads),
         ENGINE_ENV: current_engine(),
         # Same story for the trace-emitter selection (set_emitter /
         # use_emitter overrides live in parent process-local state).
@@ -206,10 +229,6 @@ def _spawn_pool(
     }
     saved_env = {k: os.environ.get(k) for k in child_env}
     os.environ.update(child_env)
-    # ``workers`` is the requested shard width; the actual pool never
-    # exceeds the task count or the core count — extra spawned processes
-    # on a saturated host only add import/contention overhead.
-    pool_size = max(1, min(workers, n_tasks, os.cpu_count() or workers))
     try:
         ctx = get_context("spawn")
         with ProcessPoolExecutor(max_workers=pool_size, mp_context=ctx) as pool:

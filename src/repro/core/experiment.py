@@ -165,8 +165,10 @@ class CellResult:
 
     Stream cells (from a :class:`repro.stream.protocol.StreamSpec`
     workload) additionally carry the epoch index and, for lifecycle-aware
-    prefetchers, the table-lifecycle policy; both stay ``None`` for plain
-    workload cells so the legacy row schema is unchanged.
+    prefetchers, the table-lifecycle policy; serving cells (from a
+    :class:`repro.serve.protocol.ServeSpec`) carry the tenant index and,
+    for AMC-family prefetchers, the table mode.  All stay ``None`` for
+    plain workload cells so the legacy row schema is unchanged.
     """
 
     kernel: str
@@ -177,6 +179,8 @@ class CellResult:
     spec: Optional[WorkloadSpec] = None  # full workload identity
     epoch: Optional[int] = None  # stream cells only
     lifecycle: Optional[str] = None  # stream cells with carried tables
+    tenant: Optional[int] = None  # serving cells only
+    table_mode: Optional[str] = None  # serving cells, AMC family
 
 
 @dataclasses.dataclass
@@ -229,8 +233,9 @@ class ExperimentResult:
     def rows(self) -> List[dict]:
         """Tidy per-cell rows: grid coordinates + flattened metrics.
 
-        Stream cells gain ``epoch`` (and ``lifecycle``) columns; plain
-        cells keep the exact legacy schema.
+        Stream cells gain ``epoch`` (and ``lifecycle``) columns; serving
+        cells gain ``tenant`` (and ``table_mode``); plain cells keep the
+        exact legacy schema.
         """
         out = []
         for c in self.cells:
@@ -243,6 +248,9 @@ class ExperimentResult:
             if c.epoch is not None:
                 row["epoch"] = c.epoch
                 row["lifecycle"] = c.lifecycle
+            if c.tenant is not None:
+                row["tenant"] = c.tenant
+                row["table_mode"] = c.table_mode
             row.update(c.metrics.row())
             out.append(row)
         return out
@@ -292,17 +300,26 @@ class Experiment:
                     "with workloads=, declare them on each WorkloadSpec"
                 )
             # Multi-epoch stream scenarios (repro.stream.protocol.StreamSpec)
-            # mix freely with plain workloads; they expand into per-epoch
-            # workload specs at run time and score through the stream
-            # protocol (duck-typed so the protocol module loads lazily).
+            # and multi-tenant serving scenarios (repro.serve.protocol.
+            # ServeSpec) mix freely with plain workloads; they expand into
+            # per-epoch / per-tenant workload specs at run time and score
+            # through their protocol modules (duck-typed so those modules
+            # load lazily).
             self.stream_specs = [
                 w for w in workloads if getattr(w, "is_stream", False)
             ]
+            self.serve_specs = [
+                w for w in workloads if getattr(w, "is_serve", False)
+            ]
             self.workload_specs = [
-                w for w in workloads if not getattr(w, "is_stream", False)
+                w
+                for w in workloads
+                if not getattr(w, "is_stream", False)
+                and not getattr(w, "is_serve", False)
             ]
         else:
             self.stream_specs = []
+            self.serve_specs = []
             if not kernels or not datasets:
                 raise ValueError("kernels= and datasets= must both be non-empty")
             self.workload_specs = [
@@ -312,7 +329,7 @@ class Experiment:
                 for s in seeds
             ]
         # Fail fast on typo'd names at declaration time, not first build.
-        for spec in self.workload_specs + self.stream_specs:
+        for spec in self.workload_specs + self.stream_specs + self.serve_specs:
             spec.validate_names()
         self.prefetchers: List[Tuple[str, Prefetcher]] = resolve_prefetchers(
             prefetchers
@@ -341,23 +358,33 @@ class Experiment:
         cells are sharded across a spawned process pool, grouped by
         workload so each trace is built once, with built traces persisted
         in the workload artifact cache.  Cell ordering and every metric
-        are bit-identical to the serial path.  Serial (the default) stays
-        the reference implementation.
+        are bit-identical to the serial path.  ``workers=1`` forces the
+        serial reference implementation; the default (``workers=None``)
+        resolves to ``min(os.cpu_count(), n_tasks)`` — parallel only when
+        the host has spare cores AND the grid has independent builds to
+        spread, and never with unpicklable ad-hoc prefetchers (which
+        cannot cross the spawn boundary).
 
         Stream workloads expand into per-epoch traces (built/cached like
         any workload — under ``workers=N`` the epochs of every stream are
         materialized across the pool) and are then scored *in the parent*
         by the stream protocol, whose cross-epoch table lifecycle is
         inherently sequential; stream results are therefore byte-identical
-        between serial and parallel runs too.
+        between serial and parallel runs too.  Serving workloads follow
+        the same contract: per-tenant traces materialize across the pool,
+        the interleaved shared-LLC scoring runs in the parent.
         """
-        if workers is not None and workers > 1:
+        if workers is None:
+            workers = self._auto_workers()
+        if workers > 1:
             if self.workload_specs:
                 result = self._run_parallel(workers, verbose)
-            else:  # stream-only grid: no cells to shard, only epoch builds
+            else:  # stream/serve-only grid: no cells to shard, only builds
                 result = ExperimentResult(cells=[], workloads={})
             if self.stream_specs:
                 self._append_stream_cells(result, verbose, workers=workers)
+            if self.serve_specs:
+                self._append_serve_cells(result, verbose, workers=workers)
             return result
         cells: List[CellResult] = []
         traces: Dict[WorkloadSpec, WorkloadTrace] = {}
@@ -385,7 +412,33 @@ class Experiment:
         result = ExperimentResult(cells=cells, workloads=traces)
         if self.stream_specs:
             self._append_stream_cells(result, verbose, workers=None)
+        if self.serve_specs:
+            self._append_serve_cells(result, verbose, workers=None)
         return result
+
+    def _auto_workers(self) -> int:
+        """Resolve ``workers=None``: one worker per independent build, up
+        to the core count — and strictly serial when parallelism cannot
+        help (single task, single core) or cannot work (unpicklable
+        ad-hoc prefetchers, which ``workers=N`` rejects loudly but a
+        *default* must tolerate)."""
+        import os
+        import pickle
+
+        n_tasks = len(self.workload_specs)
+        n_tasks += sum(len(s.epoch_specs()) for s in self.stream_specs)
+        n_tasks += len(
+            {w for s in self.serve_specs for w in s.tenant_workloads()}
+        )
+        n = min(os.cpu_count() or 1, n_tasks)
+        if n <= 1:
+            return 1
+        try:
+            for _, gen in self.prefetchers:
+                pickle.dumps(gen)
+        except Exception:
+            return 1
+        return n
 
     def _append_stream_cells(
         self, result: ExperimentResult, verbose: bool, workers: Optional[int]
@@ -436,6 +489,66 @@ class Experiment:
             result.workloads = _LazyWorkloads(
                 self.cache.get_or_build,
                 list(result.workloads) + list(epoch_specs),
+            )
+
+    def _append_serve_cells(
+        self, result: ExperimentResult, verbose: bool, workers: Optional[int]
+    ) -> None:
+        """Score every serving scenario and fold its per-tenant cells in."""
+        from repro.serve import protocol  # lazy: the protocol imports us
+
+        tenant_specs = {
+            ws: None
+            for spec in self.serve_specs
+            for ws in spec.tenant_workloads()
+        }
+        if workers is not None and workers > 1:
+            # Tenants are independent *builds*: materialize them across
+            # the pool, then run the interleaved scoring in the parent.
+            from repro.core.exec import scheduler
+
+            if self.cache.artifacts is None:
+                self.cache.artifacts = ArtifactCache()
+            scheduler.materialize_specs(
+                list(tenant_specs),
+                workers=workers,
+                artifacts=self.cache.artifacts,
+            )
+        for spec in self.serve_specs:
+            traces = [
+                self.cache.get_or_build(ws) for ws in spec.tenant_workloads()
+            ]
+            for cell in protocol.score_serve(spec, self.prefetchers, traces):
+                ws = cell.spec
+                result.cells.append(
+                    CellResult(
+                        kernel=ws.kernel,
+                        dataset=ws.dataset,
+                        prefetcher=cell.prefetcher,
+                        seed=ws.seed,
+                        metrics=cell.metrics,
+                        spec=ws,
+                        tenant=cell.tenant,
+                        table_mode=cell.table_mode,
+                    )
+                )
+                if verbose:
+                    m = cell.metrics
+                    mode = cell.table_mode or "stateless"
+                    print(
+                        f"[{ws.kernel}/{ws.dataset}@t{cell.tenant}] "
+                        f"{cell.prefetcher}/{mode}: speedup {m.speedup:.2f} "
+                        f"coverage {m.coverage:.2f} accuracy {m.accuracy:.2f}"
+                    )
+        if isinstance(result.workloads, dict):
+            for ws in tenant_specs:
+                result.workloads[ws] = self.cache.get_or_build(ws)
+        else:
+            known = set(result.workloads)
+            result.workloads = _LazyWorkloads(
+                self.cache.get_or_build,
+                list(result.workloads)
+                + [ws for ws in tenant_specs if ws not in known],
             )
 
     def _run_parallel(self, workers: int, verbose: bool) -> ExperimentResult:

@@ -122,6 +122,16 @@ class PrefetchOutcome:
     evicted_early_total: int
     pf_early: np.ndarray  # (n_pf,) prefetch fill evicted before reuse
     metadata_bytes: int = 0
+    # LLC-input stream (only with ``keep_llc_stream=True``): the exact
+    # event sequence the private LLC pass consumed, in simulation order —
+    # block ids, doubled positions (2p demand / 2p+1 prefetch), and the
+    # is-prefetch flag.  The multi-tenant serving layer re-plays these
+    # events through one *shared* LLC (repro.memsim.shared_llc) and patches
+    # ``demand_llc_hit``/``pf_llc_in_dram`` with the contended hit masks.
+    # Default None keeps artifact round-trips and pickling unchanged.
+    llc_in_blocks: np.ndarray | None = None
+    llc_in_pos2: np.ndarray | None = None
+    llc_in_is_pf: np.ndarray | None = None
 
     @property
     def issued(self) -> int:
@@ -134,12 +144,19 @@ def simulate_with_prefetch(
     pf_pos: np.ndarray,
     pf_issuer: np.ndarray | None = None,
     metadata_bytes: int = 0,
+    keep_llc_stream: bool = False,
 ) -> PrefetchOutcome:
-    """Re-simulate L2+LLC with a (possibly multi-issuer) prefetch stream."""
+    """Re-simulate L2+LLC with a (possibly multi-issuer) prefetch stream.
+
+    ``keep_llc_stream=True`` additionally stashes the LLC-input event
+    stream (blocks, doubled positions, is-prefetch flags) on the outcome
+    so a shared-LLC pass can re-simulate it under multi-tenant contention.
+    """
     cfg = profile.cfg
     nd = len(profile.l2_blocks)
     npf = len(pf_blocks)
     if npf == 0:
+        d_miss = ~profile.l2_hit
         return PrefetchOutcome(
             pf_pos=np.zeros(0, dtype=np.int64),
             pf_issuer=np.zeros(0, dtype=np.int8),
@@ -155,6 +172,11 @@ def simulate_with_prefetch(
             evicted_early_total=0,
             pf_early=np.zeros(0, dtype=bool),
             metadata_bytes=metadata_bytes,
+            llc_in_blocks=profile.l2_blocks[d_miss] if keep_llc_stream else None,
+            llc_in_pos2=2 * profile.l2_pos[d_miss] if keep_llc_stream else None,
+            llc_in_is_pf=np.zeros(int(d_miss.sum()), dtype=bool)
+            if keep_llc_stream
+            else None,
         )
 
     pf_blocks = np.asarray(pf_blocks, dtype=np.int64)
@@ -234,6 +256,9 @@ def simulate_with_prefetch(
         evicted_early_total=int(early.sum()),
         pf_early=pf_early,
         metadata_bytes=metadata_bytes,
+        llc_in_blocks=mblocks_s[llc_sel] if keep_llc_stream else None,
+        llc_in_pos2=mpos_s[llc_sel] if keep_llc_stream else None,
+        llc_in_is_pf=llc_is_pf if keep_llc_stream else None,
     )
 
 

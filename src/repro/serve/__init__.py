@@ -1,0 +1,47 @@
+"""Multi-tenant serving subsystem: K concurrent query traces over a
+shared LLC with per-tenant vs shared AMC correlation tables.
+
+Public API:
+
+- :class:`~repro.serve.protocol.TenantSpec` /
+  :class:`~repro.serve.protocol.ServeSpec` — declare a scenario; pass the
+  ServeSpec in ``Experiment(workloads=[...])`` or to
+  :func:`~repro.serve.protocol.run_serve`.
+- :func:`~repro.serve.interleave.interleave` — the deterministic
+  K-way trace merge.
+- :func:`~repro.serve.protocol.contention_payload` — the
+  ``serve-contention`` JSON schema for figures/CI.
+"""
+from repro.serve.interleave import (
+    INTERLEAVE_POLICIES,
+    Interleave,
+    deinterleave,
+    interleave,
+)
+from repro.serve.protocol import (
+    TABLE_MODES,
+    ServeCell,
+    ServeResult,
+    ServeSpec,
+    TenantSpec,
+    contention_payload,
+    run_serve,
+    score_serve,
+)
+from repro.serve.tables import shared_table_streams
+
+__all__ = [
+    "INTERLEAVE_POLICIES",
+    "Interleave",
+    "ServeCell",
+    "ServeResult",
+    "ServeSpec",
+    "TABLE_MODES",
+    "TenantSpec",
+    "contention_payload",
+    "deinterleave",
+    "interleave",
+    "run_serve",
+    "score_serve",
+    "shared_table_streams",
+]

@@ -1,0 +1,429 @@
+"""The multi-tenant serving subsystem: deterministic interleaver, shared
+LLC, per-tenant vs shared AMC tables, and the serving protocol on the
+Experiment engine.
+
+Covers the subsystem's contracts: interleave -> deinterleave is a
+bit-exact roundtrip for any (lengths, rates, policy); the shared-LLC pass
+is the identity at K=1 and can only *lose* hits under contention (LRU
+stack distance grows monotonically when foreign accesses are inserted);
+K=1 serving rows are byte-identical to the single-tenant grid path (the
+acceptance anchor); shared tables degrade vs per-tenant provisioning with
+the aliasing/thrash counters attached; and a serving scenario's serial and
+``workers=2`` runs are byte-identical.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: seeded stub strategies
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import ArtifactCache, Experiment, WorkloadCache, WorkloadSpec
+from repro.core.exec.scheduler import rows_equal
+from repro.memsim import cache_pass
+from repro.memsim.shared_llc import shared_llc_pass, tenant_shift
+from repro.serve import (
+    ServeCell,
+    ServeSpec,
+    TenantSpec,
+    contention_payload,
+    deinterleave,
+    interleave,
+)
+
+TINY = "tiny"
+
+
+# ------------------------------------------------------------ interleaver
+
+
+def test_round_robin_alternates():
+    il = interleave([3, 3, 3])
+    np.testing.assert_array_equal(il.tenant_of, np.tile([0, 1, 2], 3))
+
+
+def test_round_robin_unequal_lengths_drain():
+    # The shorter tenant drains; the longer one keeps its tail slots.
+    il = interleave([4, 2])
+    np.testing.assert_array_equal(il.tenant_of, [0, 1, 0, 1, 0, 0])
+
+
+def test_rate_policy_weights_slots():
+    # rate 2:1 -> two tenant-0 accesses per tenant-1 access (AAB pattern).
+    il = interleave([4, 2], rates=[2.0, 1.0], policy="rate")
+    np.testing.assert_array_equal(il.tenant_of, [0, 0, 1, 0, 0, 1])
+
+
+def test_interleave_validation():
+    with pytest.raises(ValueError, match="unknown interleave policy"):
+        interleave([3], policy="random")
+    with pytest.raises(ValueError, match="must match"):
+        interleave([3, 3], rates=[1.0], policy="rate")
+    with pytest.raises(ValueError, match="positive"):
+        interleave([3, 3], rates=[1.0, -2.0], policy="rate")
+    with pytest.raises(ValueError, match="at least one tenant"):
+        interleave([])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.integers(1, 4),
+    seed=st.integers(0, 200),
+    policy=st.sampled_from(["round_robin", "rate"]),
+)
+def test_interleave_deinterleave_roundtrip(k, seed, policy):
+    """Property: the merge is a permutation that preserves per-tenant
+    order, and scatter-by-gmaps / gather-by-deinterleave is bit-exact."""
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(0, 40, size=k).tolist()
+    rates = rng.uniform(0.25, 4.0, size=k).tolist()
+    il = interleave(lengths, rates=rates, policy=policy)
+    total = sum(lengths)
+    assert il.total == total and il.num_tenants == k
+    # coverage: gmaps partition arange(total)
+    allslots = np.concatenate(il.gmaps) if total else np.zeros(0, np.int64)
+    np.testing.assert_array_equal(np.sort(allslots), np.arange(total))
+    slots = deinterleave(il)
+    for m, s, n in zip(il.gmaps, slots, lengths):
+        assert len(m) == n
+        # order preservation: global slots strictly increase privately
+        assert np.all(np.diff(m) > 0)
+        # both representations agree
+        np.testing.assert_array_equal(m, s)
+    # bit-exact payload roundtrip through the global stream
+    payloads = [rng.integers(0, 2**40, size=n) for n in lengths]
+    gstream = np.empty(total, dtype=np.int64)
+    for m, p in zip(il.gmaps, payloads):
+        gstream[m] = p
+    for s, p in zip(slots, payloads):
+        np.testing.assert_array_equal(gstream[s], p)
+
+
+# ------------------------------------------------------------- shared LLC
+
+
+def test_tenant_shift_preserves_set_mapping():
+    for max_block, sets in [(1000, 64), (3, 64), (10**6, 1), (63, 64)]:
+        shift = tenant_shift(max_block, sets)
+        assert (1 << shift) > max_block  # namespaces disjoint
+        for k in range(4):
+            assert (k << shift) % max(sets, 1) == 0  # set index preserved
+
+
+def test_shared_llc_single_tenant_is_identity():
+    rng = np.random.default_rng(0)
+    blocks = rng.integers(0, 300, size=2000)
+    keys = np.arange(len(blocks))
+    for sets, ways in [(64, 8), (16, 2), (1, 4)]:
+        (hits,) = shared_llc_pass([(blocks, keys)], sets, ways)
+        np.testing.assert_array_equal(hits, cache_pass(blocks, sets, ways))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), sets=st.sampled_from([4, 16, 64]))
+def test_contention_only_loses_hits(seed, sets):
+    """Property: inserting a foreign tenant's accesses can only grow a
+    reuse's LRU stack distance — every shared-LLC hit was a solo hit."""
+    rng = np.random.default_rng(seed)
+    b0 = rng.integers(0, 200, size=rng.integers(1, 500))
+    b1 = rng.integers(0, 200, size=rng.integers(1, 500))
+    il = interleave([len(b0), len(b1)])
+    shared = shared_llc_pass(
+        [(b0, il.gmaps[0]), (b1, il.gmaps[1])], sets, ways=4
+    )
+    for blocks, sh in zip((b0, b1), shared):
+        solo = cache_pass(blocks, sets, ways=4)
+        assert not np.any(sh & ~solo)
+
+
+# ------------------------------------------------------------- protocol
+
+
+@pytest.fixture(scope="module")
+def arts(tmp_path_factory):
+    return ArtifactCache(tmp_path_factory.mktemp("serve-artifacts"))
+
+
+@pytest.fixture(scope="module")
+def serve_cache(arts):
+    return WorkloadCache(artifacts=arts)
+
+
+@pytest.fixture(scope="module")
+def duo_result(serve_cache):
+    spec = ServeSpec(tenants=(TenantSpec("pgd", TINY), TenantSpec("cc", TINY)))
+    result = Experiment(
+        workloads=[spec], prefetchers=["amc", "nextline2"], cache=serve_cache
+    ).run(workers=1)
+    return spec, result
+
+
+def test_serve_spec_validation():
+    t = TenantSpec("pgd", TINY)
+    with pytest.raises(ValueError, match=">= 1 tenant"):
+        ServeSpec(tenants=())
+    with pytest.raises(ValueError, match="unknown interleave policy"):
+        ServeSpec(tenants=(t,), policy="chaos")
+    with pytest.raises(ValueError, match="unknown table mode"):
+        ServeSpec(tenants=(t,), table_modes=("global",))
+    with pytest.raises(ValueError, match="rate must be positive"):
+        TenantSpec("pgd", TINY, rate=0.0)
+    with pytest.raises(ValueError, match="unknown dataset"):
+        Experiment(
+            workloads=[ServeSpec(tenants=(TenantSpec("pgd", "nope"),))],
+            prefetchers=["amc"],
+        )
+
+
+def _strip_serving(row):
+    """Drop the serving-only fields, leaving the single-tenant row."""
+    row = dict(row)
+    row.pop("tenant")
+    row.pop("table_mode")
+    row["info"] = {k: v for k, v in row["info"].items() if k != "serve"}
+    return row
+
+
+def test_k1_serving_byte_identical_to_grid(serve_cache):
+    """Acceptance anchor: one tenant, identity interleave, zero-offset LLC
+    namespace — every serving row (both AMC table modes and the stateless
+    baseline) is byte-identical to the plain single-tenant grid row."""
+    spec = ServeSpec(tenants=(TenantSpec("pgd", TINY),))
+    serve = Experiment(
+        workloads=[spec], prefetchers=["amc", "nextline2"], cache=serve_cache
+    ).run(workers=1)
+    plain = Experiment(
+        workloads=[WorkloadSpec("pgd", TINY)],
+        prefetchers=["amc", "nextline2"],
+        cache=serve_cache,
+    ).run(workers=1)
+    plain_by_pf = {r["prefetcher"]: r for r in plain.rows()}
+    serve_rows = serve.rows()
+    assert {r["table_mode"] for r in serve_rows} == {
+        "per_tenant",
+        "shared",
+        None,
+    }
+    for row in serve_rows:
+        assert rows_equal(
+            [_strip_serving(row)], [plain_by_pf[row["prefetcher"]]]
+        ), f"{row['prefetcher']}/{row['table_mode']} diverged from grid"
+
+
+def test_serve_through_experiment(duo_result):
+    spec, result = duo_result
+    rows = result.rows()
+    # 2 tenants x (2 AMC table modes + 1 stateless baseline)
+    assert len(rows) == 6
+    amc = [r for r in rows if r["prefetcher"] == "amc"]
+    assert sorted((r["tenant"], r["table_mode"]) for r in amc) == [
+        (0, "per_tenant"),
+        (0, "shared"),
+        (1, "per_tenant"),
+        (1, "shared"),
+    ]
+    for r in rows:
+        serve = r["info"]["serve"]
+        assert serve["policy"] == "round_robin"
+        assert serve["tenant"] == r["tenant"]
+        assert serve["llc_demand_hits_lost"] >= 0
+    nl = [r for r in rows if r["prefetcher"] == "nextline2"]
+    assert all(r["table_mode"] is None for r in nl)
+    # shared rows carry the shared-table contention counters
+    st_info = [
+        r["info"]["serve"]["shared_table"]
+        for r in amc
+        if r["table_mode"] == "shared"
+    ]
+    assert all(s["lookups"] > 0 for s in st_info)
+    assert all("cross_tenant_overwrites" in s for s in st_info)
+
+
+def test_shared_tables_degrade_vs_per_tenant(duo_result):
+    """The tentpole's headline: one shared table store aliases both
+    tenants' correlations, so mean coverage/accuracy drop below the
+    per-tenant provisioning upper bound, with the damage itemized."""
+    spec, result = duo_result
+    by_mode = {}
+    for r in result.rows():
+        if r["prefetcher"] == "amc":
+            by_mode.setdefault(r["table_mode"], []).append(r)
+    mean = lambda rows, key: np.mean([r[key] for r in rows])  # noqa: E731
+    assert mean(by_mode["shared"], "coverage") <= mean(
+        by_mode["per_tenant"], "coverage"
+    )
+    shared_info = [r["info"]["serve"]["shared_table"] for r in by_mode["shared"]]
+    # pgd and cc both key every iteration's table at within_epoch=0, so the
+    # shared store thrashes: tenants overwrite and alias each other.
+    assert sum(s["aliased_hits"] for s in shared_info) > 0
+    assert shared_info[0]["cross_tenant_overwrites"] > 0
+    assert shared_info[0]["thrashed_entries"] > 0
+
+
+def test_contention_payload_schema(duo_result):
+    spec, result = duo_result
+    wspecs = spec.tenant_workloads()
+    cells = [
+        ServeCell(
+            tenant=c.tenant,
+            prefetcher=c.prefetcher,
+            table_mode=c.table_mode,
+            metrics=c.metrics,
+            spec=wspecs[c.tenant],
+        )
+        for c in result.cells
+    ]
+    doc = contention_payload(spec, cells)
+    assert doc["schema"] == "serve-contention"
+    assert doc["num_tenants"] == 2 and doc["policy"] == "round_robin"
+    assert [t["kernel"] for t in doc["tenants"]] == ["pgd", "cc"]
+    amc = doc["prefetchers"]["amc"]
+    assert set(amc) == {"per_tenant", "shared"}
+    for mode in amc.values():
+        assert [r["tenant"] for r in mode["per_tenant_rows"]] == [0, 1]
+        assert 0.0 <= mode["mean_accuracy"] <= 1.0
+    assert set(doc["prefetchers"]["nextline2"]) == {"stateless"}
+    assert (
+        amc["shared"]["mean_coverage"] <= amc["per_tenant"]["mean_coverage"]
+    )
+
+
+def test_serve_parallel_matches_serial(serve_cache, duo_result):
+    spec, serial = duo_result
+    parallel = Experiment(
+        workloads=[spec], prefetchers=["amc", "nextline2"], cache=serve_cache
+    ).run(workers=2)
+    assert rows_equal(serial.rows(), parallel.rows())
+
+
+# ------------------------------------------------- auto-worker resolution
+
+
+def test_auto_workers_scales_with_tasks_and_cores(monkeypatch):
+    monkeypatch.setattr("os.cpu_count", lambda: 8)
+    two = Experiment(
+        workloads=[WorkloadSpec("pgd", TINY), WorkloadSpec("cc", TINY)],
+        prefetchers=["amc"],
+    )
+    assert two._auto_workers() == 2  # min(cores, tasks)
+    one = Experiment(workloads=[WorkloadSpec("pgd", TINY)], prefetchers=["amc"])
+    assert one._auto_workers() == 1  # a single build gains nothing
+    monkeypatch.setattr("os.cpu_count", lambda: 1)
+    assert two._auto_workers() == 1  # no spare cores
+
+
+def test_auto_workers_serial_for_unpicklable_prefetchers(monkeypatch):
+    monkeypatch.setattr("os.cpu_count", lambda: 8)
+    exp = Experiment(
+        workloads=[WorkloadSpec("pgd", TINY), WorkloadSpec("cc", TINY)],
+        prefetchers=[("adhoc", lambda w: None)],
+    )
+    # The default must tolerate what explicit workers=N rejects loudly.
+    assert exp._auto_workers() == 1
+
+
+def test_auto_workers_counts_serve_tenants(monkeypatch):
+    monkeypatch.setattr("os.cpu_count", lambda: 8)
+    spec = ServeSpec(
+        tenants=(
+            TenantSpec("pgd", TINY),
+            TenantSpec("cc", TINY),
+            TenantSpec("pgd", TINY, seed=1),
+        )
+    )
+    exp = Experiment(workloads=[spec], prefetchers=["amc"])
+    assert exp._auto_workers() == 3  # one per distinct tenant build
+
+
+# ----------------------------------------------------------- figures glue
+
+
+def test_figures_load_serves_and_warns(tmp_path):
+    """benchmarks.figures: serve-contention docs route to load_serves /
+    fig_contention; load() skips them silently but WARNS (not silence) on
+    anything else it drops."""
+    import json
+    import sys
+    import warnings
+
+    sys.path.insert(0, ".")
+    from benchmarks import figures
+
+    def row(tenant, cov, shared_table=None):
+        serve = {"llc_demand_hits_lost": 3, "llc_pf_hits_lost": 1}
+        if shared_table is not None:
+            serve["shared_table"] = shared_table
+        return {
+            "tenant": tenant,
+            "kernel": "pgd",
+            "dataset": "tiny",
+            "seed": tenant,
+            "speedup": 1.1,
+            "coverage": cov,
+            "accuracy": 0.9,
+            "useful": 10,
+            "issued": 12,
+            "serve": serve,
+        }
+
+    serve_doc = {
+        "schema": "serve-contention",
+        "policy": "round_robin",
+        "num_tenants": 2,
+        "table_modes": ["per_tenant", "shared"],
+        "tenants": [
+            {"kernel": "pgd", "dataset": "tiny", "seed": 0, "rate": 1.0},
+            {"kernel": "pgd", "dataset": "tiny", "seed": 1, "rate": 1.0},
+        ],
+        "prefetchers": {
+            "amc": {
+                "per_tenant": {
+                    "per_tenant_rows": [row(0, 0.6), row(1, 0.5)],
+                    "mean_coverage": 0.55,
+                    "mean_accuracy": 0.9,
+                    "mean_speedup": 1.1,
+                },
+                "shared": {
+                    "per_tenant_rows": [
+                        row(0, 0.4, {"aliased_hits": 2, "cross_tenant_overwrites": 1}),
+                        row(1, 0.3, {"aliased_hits": 3, "cross_tenant_overwrites": 1}),
+                    ],
+                    "mean_coverage": 0.35,
+                    "mean_accuracy": 0.7,
+                    "mean_speedup": 1.05,
+                },
+            }
+        },
+    }
+    sweep_doc = {
+        "kernel": "pgd",
+        "dataset": "tiny",
+        "prefetchers": {"amc": {"speedup": 1.2, "coverage": 0.5, "accuracy": 0.9}},
+    }
+    (tmp_path / "pgd_tiny.json").write_text(json.dumps(sweep_doc))
+    (tmp_path / "contention_tiny_k2.json").write_text(json.dumps(serve_doc))
+    (tmp_path / "unknown.json").write_text(json.dumps({"schema": "future-thing"}))
+    (tmp_path / "corrupt.json").write_text('{"kernel": "pgd", "trunc')
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        data = figures.load(str(tmp_path))
+    assert set(data) == {("pgd", "tiny")}
+    skipped = [
+        str(w.message)
+        for w in caught
+        if str(w.message).startswith("figures.load")
+    ]
+    assert any("unknown.json" in m for m in skipped)  # unknown doc warns
+    assert any("corrupt.json" in m for m in skipped)  # corrupt file warns
+    assert not any("contention" in m for m in skipped)  # known schema: silent
+
+    serves = figures.load_serves(str(tmp_path))
+    assert set(serves) == {("pgd/tiny#s0+pgd/tiny#s1", "round_robin")}
+    headers, rows, derived = figures.fig_contention(serves)
+    assert [r[2] for r in rows] == ["per_tenant", "shared"]
+    shared_row = rows[1]
+    assert shared_row[headers.index("aliased_hits")] == 5
+    key = "table_isolation_coverage_gain/K=2[round_robin]pgd/tiny#s0+pgd/tiny#s1/amc"
+    assert derived[key] == pytest.approx(0.2)
