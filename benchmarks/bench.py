@@ -26,12 +26,24 @@ breakdown (``serve_interleave`` / ``serve_llc`` / ``serve_score``), and a
 serial-vs-workers parity gate wired into the exit code like the
 grid/stream gates.
 
+Schema v6 adds the sharded paper-scale section: the ``ShardedSpec``
+streaming-scoring path is parity-gated bit-identical against the unsharded
+``score_prefetcher`` rows on a real cell, and (full mode) a peak-RSS gauge
+scores the ~8.5M-edge ``road-8m`` cell and the ``comdblp`` cell in fresh
+child interpreters at the same shard size, asserting the two peaks agree
+within 10% — i.e. streaming memory is flat in trace length (32.5M vs 118k
+accesses).  Both children run against the shared persistent XLA
+compilation cache (warmed by one discarded run) so the gauge measures
+streaming state, not one-time compile transients.
+
 The dated JSONs accumulate as the repo's machine-readable perf trajectory;
 CI runs ``--smoke`` (1 kernel x 1 dataset x 3 prefetchers) on every push,
 uploads the JSON as a build artifact, and fails this script (exit 1) when
 the grid errors, parallel results diverge from serial, the set-parallel
-cache engine diverges from the serial ``lax.scan`` reference, or the
-batched trace emitter diverges from the per-iteration reference.
+cache engine diverges from the serial ``lax.scan`` reference, the batched
+trace emitter diverges from the per-iteration reference, the sharded
+streaming scorer diverges from the unsharded path, or (full mode) the
+sharded peak-RSS gauge is not flat.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench [--smoke]
@@ -55,7 +67,7 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 # Three prefetchers spanning the suite's families: the paper's contribution
 # (amc), a spatial baseline (vldp), and a replay baseline (rnr).  The
@@ -106,6 +118,99 @@ FULL_CELLS = [
 # frontiers — per-iteration overhead dominates the reference emitter);
 # pgd_pull/comdblp replays the dense body every iteration.
 EMITTER_MICRO = [("bfs", "tinyroad"), ("pgd_pull", "comdblp")]
+# Sharded paper-scale section (schema v6).  The parity sub-gate scores a
+# real cell through the ShardedSpec streaming path at a shard size small
+# enough to force many seams and compares rows bit-for-bit against the
+# unsharded path.  The RSS gauge scores the two cells below — 275x apart
+# in trace length — in fresh child interpreters at the same shard size and
+# requires their ru_maxrss peaks to agree within SHARD_RSS_TOL.
+SHARD_PREFETCHERS = ["amc", "nextline2"]
+SHARD_PARITY_ACCESSES = 1 << 14
+SHARD_GAUGE_ACCESSES = 1 << 16
+SHARD_RSS_CELLS = [("bfs", "comdblp", 0), ("bfs", "road-8m", 0)]
+SHARD_RSS_TOL = 0.10
+
+
+def _sharded_child(argv) -> int:
+    """Hidden ``--_score-sharded`` re-exec target for the peak-RSS gauge.
+
+    Scores one pre-materialized sharded cell with the cheap ``nextline2``
+    prefetcher in this (fresh) interpreter and reports its own peak RSS
+    as JSON on stdout.  The JAX persistent-compilation-cache env vars are
+    inherited from the parent bench process, so a warmed cache makes the
+    child's peak free of compile-time transients.
+
+    The peak is read from ``/proc/self/status`` ``VmHWM``, which execve
+    resets to this process's own image — ``getrusage``'s ``ru_maxrss``
+    would instead inherit the high-water mark of the (large) parent bench
+    process across fork/exec and report the parent's peak, not ours.
+    """
+    kernel, dataset, seed, shard_accesses, cache_dir = argv
+
+    from repro.core import WorkloadSpec
+    from repro.core.exec.artifacts import ArtifactCache
+    from repro.core.exec.sharded import ShardedSpec, score_sharded
+    from repro.core.registry import resolve_prefetchers
+
+    spec = ShardedSpec(
+        base=WorkloadSpec(kernel, dataset, seed=int(seed)),
+        shard_accesses=int(shard_accesses),
+    )
+    cache = ArtifactCache(cache_dir)
+    manifest = cache.load_manifest(spec)
+    assert manifest is not None, "gauge cell must be pre-materialized"
+    t0 = time.perf_counter()
+    scored = score_sharded(spec, resolve_prefetchers(["nextline2"]), cache)
+    dt = time.perf_counter() - t0
+
+    def _peak_kb() -> int:
+        try:
+            with open("/proc/self/status") as f:
+                for line in f:
+                    if line.startswith("VmHWM:"):
+                        return int(line.split()[1])
+        except OSError:
+            pass
+        import resource  # non-Linux fallback (fork-inheritance caveat)
+
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+    json.dump(
+        {
+            "maxrss_kb": _peak_kb(),
+            "score_s": round(dt, 2),
+            "accesses": int(manifest["num_accesses"]),
+            "shards": len(manifest["shard_sizes"]),
+            "speedup": {n: round(m.speedup, 4) for n, m in scored},
+        },
+        sys.stdout,
+    )
+    print()
+    return 0
+
+
+def _gauge_child_run(kernel, dataset, seed, shard_accesses, cache_dir):
+    """Run the hidden gauge mode in a fresh interpreter; parse its JSON."""
+    import subprocess
+
+    root = Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [
+            sys.executable,
+            str(Path(__file__).resolve()),
+            "--_score-sharded",
+            kernel,
+            dataset,
+            str(seed),
+            str(shard_accesses),
+            cache_dir,
+        ],
+        cwd=root,
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    return json.loads(proc.stdout)
 
 
 def _grid_seconds(specs, pairs, cache_dir, workers):
@@ -124,6 +229,9 @@ def _grid_seconds(specs, pairs, cache_dir, workers):
 
 
 def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "--_score-sharded":
+        return _sharded_child(argv[1:])
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
         "--smoke",
@@ -413,6 +521,109 @@ def main(argv=None) -> int:
                 "queries_per_s": qps,
                 "parallel_matches_serial": serve_same,
             }
+
+        # --- sharded paper-scale subsystem (schema v6): the streaming
+        # scorer must be bit-identical to the unsharded path, and (full
+        # mode) peak RSS must be flat in trace length.
+        from repro.core.exec.artifacts import ArtifactCache
+        from repro.core.exec.sharded import (
+            ShardedSpec,
+            ensure_shards,
+            score_sharded,
+        )
+
+        acache = ArtifactCache(cache_dir)
+        par_kernel, par_dataset = (
+            ("bfs", "tiny") if args.smoke else ("bfs", "comdblp")
+        )
+        par_base = WorkloadSpec(par_kernel, par_dataset, seed=0)
+        shard_pairs = resolve_prefetchers(SHARD_PREFETCHERS)
+        print(
+            f"[bench] sharded parity: {par_kernel}/{par_dataset} at "
+            f"shard_accesses={SHARD_PARITY_ACCESSES}"
+        )
+        shard_stages: dict = {}
+        with collect_stages(into=shard_stages):
+            t0 = time.perf_counter()
+            sh_scored = score_sharded(
+                ShardedSpec(
+                    base=par_base, shard_accesses=SHARD_PARITY_ACCESSES
+                ),
+                shard_pairs,
+                acache,
+            )
+            shard_score_s = time.perf_counter() - t0
+        par_trace = par_base.build()
+        un_rows = [
+            score_prefetcher(par_trace, n, g).row() for n, g in shard_pairs
+        ]
+        del par_trace
+        sharded_parity = rows_equal(un_rows, [m.row() for _, m in sh_scored])
+        parity = parity and sharded_parity
+        print(
+            f"[bench] sharded vs unsharded rows: "
+            f"{'ok' if sharded_parity else 'DIVERGED'} "
+            f"({shard_score_s:.1f}s sharded)"
+        )
+        if not sharded_parity:
+            print(
+                "[bench] PARITY FAILURE: sharded streaming scoring diverges "
+                "from the unsharded path",
+                file=sys.stderr,
+            )
+
+        shard_rss = None
+        rss_flat = True
+        if not args.smoke:
+            gauge = {}
+            for gk, gd, gs in SHARD_RSS_CELLS:
+                gspec = ShardedSpec(
+                    base=WorkloadSpec(gk, gd, seed=gs),
+                    shard_accesses=SHARD_GAUGE_ACCESSES,
+                )
+                t0 = time.perf_counter()
+                ensure_shards(gspec, acache)
+                mat_s = time.perf_counter() - t0
+                gauge[gd] = {"kernel": gk, "materialize_s": round(mat_s, 2)}
+                print(f"[bench] sharded gauge: {gk}/{gd} built {mat_s:.1f}s")
+            # One discarded warm-up run lands the long cell's XLA compiles
+            # in the shared persistent compilation cache, so both measured
+            # children pay zero compile-time memory spikes and the gauge
+            # compares streaming-state footprints only.
+            _gauge_child_run(
+                *SHARD_RSS_CELLS[-1], SHARD_GAUGE_ACCESSES, cache_dir
+            )
+            for gk, gd, gs in SHARD_RSS_CELLS:
+                rep = _gauge_child_run(
+                    gk, gd, gs, SHARD_GAUGE_ACCESSES, cache_dir
+                )
+                gauge[gd].update(rep)
+                print(
+                    f"[bench] sharded gauge: {gk}/{gd} "
+                    f"{rep['accesses']} accesses / {rep['shards']} shards: "
+                    f"peak {rep['maxrss_kb']} KiB ({rep['score_s']:.1f}s)"
+                )
+            ratio = (
+                gauge["road-8m"]["maxrss_kb"] / gauge["comdblp"]["maxrss_kb"]
+            )
+            rss_flat = abs(ratio - 1.0) <= SHARD_RSS_TOL
+            shard_rss = {
+                "cells": gauge,
+                "ratio_vs_comdblp": round(ratio, 4),
+                "tolerance": SHARD_RSS_TOL,
+                "flat": rss_flat,
+            }
+            print(
+                f"[bench] sharded gauge: peak-RSS ratio {ratio:.3f} "
+                f"({'flat' if rss_flat else 'NOT FLAT'} within "
+                f"{SHARD_RSS_TOL:.0%})"
+            )
+            if not rss_flat:
+                print(
+                    "[bench] RSS FAILURE: sharded scoring peak RSS grows "
+                    "with trace length",
+                    file=sys.stderr,
+                )
     finally:
         if own_cache_dir:
             shutil.rmtree(cache_dir, ignore_errors=True)
@@ -482,9 +693,23 @@ def main(argv=None) -> int:
             "prefetchers": SERVE_PREFETCHERS,
             "by_tenants": serve_by_tenants,
         },
+        # Schema v6: the sharded paper-scale subsystem — streaming-scoring
+        # parity vs the unsharded path, the streaming stage timers, and
+        # (full mode) the peak-RSS flatness gauge.
+        "sharded": {
+            "prefetchers": SHARD_PREFETCHERS,
+            "parity_cell": f"{par_kernel}/{par_dataset}#s0",
+            "parity_shard_accesses": SHARD_PARITY_ACCESSES,
+            "parity_matches_unsharded": sharded_parity,
+            "score_s": shard_score_s,
+            "stages_s": dict(sorted(shard_stages.items())),
+            "gauge_shard_accesses": SHARD_GAUGE_ACCESSES,
+            "rss": shard_rss,
+        },
         "parallel_matches_serial": parity,
         "engine_matches_reference": engine_ok,
         "emitter_matches_reference": emitter_ok,
+        "sharded_rss_flat": rss_flat,
     }
     out_dir = Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -499,7 +724,7 @@ def main(argv=None) -> int:
         json.dump(out, f, indent=1)
         f.write("\n")
     print(f"[bench] wrote {out_path}")
-    return 0 if (parity and engine_ok and emitter_ok) else 1
+    return 0 if (parity and engine_ok and emitter_ok and rss_flat) else 1
 
 
 if __name__ == "__main__":

@@ -5,12 +5,14 @@
 Reads every dated ``BENCH_*.json`` at the repo root and rolls the stage
 timers up into one trajectory table — one column per run, one row per
 stage key.  The rollup takes the UNION of stage keys found in the
-documents (top-level ``stages_s`` including nested cache-pass/score
-dicts, the stream subsystem's ``update_apply``/``trace_epoch``/
-``table_carry`` stages, and the serving subsystem's ``serve_interleave``/
-``serve_llc``/``serve_score`` stages per tenant count), so a stage added
-by a newer schema shows up instead of being silently dropped; older
-documents that predate a stage simply show ``-``.
+documents, discovered generically: every ``stages_s`` dict anywhere in a
+document (the top-level pipeline breakdown including nested
+cache-pass/score dicts, and each subsystem section — stream, serve per
+tenant count, sharded) is flattened under its path prefix.  A stage
+added by a newer schema therefore shows up without this script needing
+to learn the section, and older documents that predate a stage show an
+explicit ``n/a`` instead of being silently dropped or rendered as an
+ambiguous dash.
 
 If ``results/roofline_baseline.json`` exists (snapshot taken before the
 §5 perf iterations), the report also re-derives the current roofline and
@@ -30,26 +32,38 @@ import sys
 def flatten_stages(doc: dict) -> dict:
     """One BENCH document -> flat {stage_key: seconds}.
 
-    Walks the actual keys present (recursing into nested dicts like
-    ``cache_pass`` / ``score``), so unknown or future stage names are
-    carried through instead of dropped.
+    Discovers every ``stages_s`` dict anywhere in the document and
+    flattens its numeric subtree under the path it was found at, so a
+    subsystem section added by a newer schema (stream in v3, serve in
+    v5, sharded in v6, ...) contributes its stage keys without this
+    function enumerating the sections.
     """
     flat: dict = {}
 
-    def walk(prefix, node):
+    def emit(prefix, node):
         if isinstance(node, dict):
             for k, v in node.items():
-                walk(f"{prefix}.{k}" if prefix else k, v)
+                emit(f"{prefix}.{k}" if prefix else k, v)
         elif isinstance(node, (int, float)):
             flat[prefix] = float(node)
 
-    walk("", doc.get("stages_s", {}))
-    # Subsystem stage breakdowns live under their own sections.
-    walk("stream", doc.get("stream", {}).get("stages_s", {}))
-    for n_tenants, sub in sorted(
-        doc.get("serve", {}).get("by_tenants", {}).items()
-    ):
-        walk(f"serve[K={n_tenants}]", sub.get("stages_s", {}))
+    def prefix_of(path):
+        # serve.by_tenants.<K> keeps its historical serve[K=<K>] label so
+        # trajectory rows line up across schema versions.
+        if len(path) >= 3 and path[-2] == "by_tenants":
+            return ".".join(path[:-2]) + f"[K={path[-1]}]"
+        return ".".join(path)
+
+    def find(path, node):
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            if k == "stages_s":
+                emit(prefix_of(path), v)
+            else:
+                find(path + (k,), v)
+
+    find((), doc)
     return flat
 
 
@@ -79,8 +93,10 @@ def rollup_markdown(labels, keys, flats) -> str:
         "|---|" + "---|" * len(labels),
     ]
     for k in keys:
+        # "n/a" marks a run whose schema predates this stage key — the
+        # stage was not measured, as opposed to measuring zero seconds.
         cells = [
-            f"{flat[k]:.3f}" if k in flat else "-" for flat in flats
+            f"{flat[k]:.3f}" if k in flat else "n/a" for flat in flats
         ]
         lines.append(f"| {k} | " + " | ".join(cells) + " |")
     return "\n".join(lines)

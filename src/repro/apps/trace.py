@@ -583,3 +583,65 @@ def concat_traces(traces: List[IterationTrace], epoch_of=None):
         [np.full(len(t), epoch_of(t.iteration), dtype=np.int32) for t in traces]
     )
     return block, array_id, iter_id, elem
+
+
+def iteration_access_counts(run: AppRun, cfg: TraceConfig | None = None) -> np.ndarray:
+    """Exact per-iteration access counts of ``trace_run`` without emitting.
+
+    Push iteration ``i`` touches ``3 * |frontier|`` vertex-array slots plus
+    ``2`` per outgoing edge of the frontier; a pull iteration reads the
+    whole ``(frontier byte, offsets, neighbor+value)`` body: ``3n + 2m``.
+    Used by :func:`iter_run_trace_chunks` to group iterations, and by the
+    sharded builder to locate run boundaries without a whole-run trace.
+    """
+    g = run.graph
+    offsets = g.offsets.astype(np.int64)
+    pull_len = 3 * g.num_vertices + 2 * g.num_edges
+    sizes = np.zeros(len(run.frontiers), dtype=np.int64)
+    for i, (f, d) in enumerate(zip(run.frontiers, run.iteration_directions())):
+        if d == "pull":
+            sizes[i] = pull_len
+        else:
+            deg = offsets[np.asarray(f) + 1] - offsets[np.asarray(f)]
+            sizes[i] = 3 * len(f) + 2 * int(deg.sum())
+    return sizes
+
+
+def iter_run_trace_chunks(
+    run: AppRun, cfg: TraceConfig | None = None, max_accesses: int = 1 << 22
+) -> Iterator[tuple]:
+    """Yield ``(start_iteration, RunTrace)`` chunks covering ``run``.
+
+    Whole iterations are grouped greedily up to ``max_accesses`` (a single
+    iteration larger than the cap forms its own chunk), and each group is
+    emitted through the active emitter on an iteration-sliced copy of the
+    run.  Both emitters are per-iteration independent (the batched path's
+    concatenated-frontier gather produces each iteration's slice from that
+    iteration's frontier alone, and the pull body is a per-graph constant),
+    so the concatenation of the yielded chunk streams is bit-identical to
+    ``trace_run(run, cfg)`` — the whole-run trace never has to exist in
+    memory at once.
+    """
+    g = run.graph
+    cfg = cfg or TraceConfig(num_vertices=g.num_vertices, num_edges=g.num_edges)
+    n_iters = len(run.frontiers)
+    if n_iters == 0:
+        yield 0, trace_run(run, cfg)
+        return
+    sizes = iteration_access_counts(run, cfg)
+    dirs = run.iteration_directions()
+    i0 = 0
+    while i0 < n_iters:
+        i1 = i0 + 1
+        acc = int(sizes[i0])
+        while i1 < n_iters and acc + int(sizes[i1]) <= max_accesses:
+            acc += int(sizes[i1])
+            i1 += 1
+        sub = dataclasses.replace(
+            run,
+            frontiers=run.frontiers[i0:i1],
+            directions=None if run.directions is None else dirs[i0:i1],
+            num_iters=i1 - i0,
+        )
+        yield i0, trace_run(sub, cfg)
+        i0 = i1

@@ -120,6 +120,8 @@ class ArtifactCache:
         return json.dumps(doc, sort_keys=True)
 
     def path_for(self, spec: WorkloadSpec) -> Path:
+        if getattr(spec, "is_sharded", False):
+            return self.manifest_path(spec)
         digest = hashlib.sha256(self.key(spec).encode()).hexdigest()[:20]
         epoch = getattr(spec, "epoch", None)
         tag = f"_e{epoch}" if epoch is not None else ""
@@ -134,12 +136,99 @@ class ArtifactCache:
         killed process) reads as absent.  Callers that plan work from
         ``has()`` (the grid scheduler splits only materialized workloads)
         therefore won't fan a doomed load out to several workers.
+
+        Sharded specs check the manifest (written last — the commit
+        point) plus the presence of every shard file it names.
         """
+        if getattr(spec, "is_sharded", False):
+            manifest = self.load_manifest(spec)
+            if manifest is None:
+                return False
+            return all(
+                self.shard_path(spec, i).exists()
+                for i in range(len(manifest["shard_sizes"]))
+            )
         try:
             with zipfile.ZipFile(self.path_for(spec)) as z:
                 return "meta.npy" in z.namelist()  # np.savez appends .npy
         except (OSError, zipfile.BadZipFile):
             return False
+
+    # ---------------------------------------------- sharded trace store
+    #
+    # A paper-scale trace is stored as fixed-size shard files plus one
+    # JSON manifest.  Shard ``i`` is keyed on sha256(key(spec) + "#shard"
+    # + i) — the spec identity plus the shard index, so a shard-size or
+    # spec change moves every file.  The manifest (keyed on the spec
+    # alone) is written *after* all shards: its presence commits the
+    # build, and a build killed mid-way reads as absent.
+
+    def _shard_digest(self, spec, index: Optional[int] = None) -> str:
+        doc = self.key(spec)
+        if index is not None:
+            doc = f"{doc}#shard{index}"
+        return hashlib.sha256(doc.encode()).hexdigest()[:20]
+
+    def manifest_path(self, spec) -> Path:
+        name = (
+            f"{spec.kernel}_{spec.dataset}_s{spec.seed}"
+            f"_{self._shard_digest(spec)}.manifest.json"
+        )
+        return self.root / name
+
+    def shard_path(self, spec, index: int) -> Path:
+        name = (
+            f"{spec.kernel}_{spec.dataset}_s{spec.seed}"
+            f"_k{index}_{self._shard_digest(spec, index)}.npz"
+        )
+        return self.root / name
+
+    def load_manifest(self, spec) -> Optional[dict]:
+        try:
+            with open(self.manifest_path(spec)) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if manifest.get("schema") != ARTIFACT_SCHEMA:
+            return None
+        return manifest
+
+    def save_manifest(self, spec, manifest: dict) -> Path:
+        path = self.manifest_path(spec)
+        self.root.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump({"schema": ARTIFACT_SCHEMA, **manifest}, f, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    def save_shard(self, spec, index: int, arrays: dict) -> Path:
+        path = self.shard_path(spec, index)
+        self.root.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez_compressed(f, **arrays)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self.saves += 1
+        return path
+
+    def load_shard(self, spec, index: int) -> dict:
+        with np.load(self.shard_path(spec, index), allow_pickle=False) as z:
+            return {k: z[k] for k in z.files}
 
     def load(self, spec: WorkloadSpec) -> Optional[WorkloadTrace]:
         """The cached trace for ``spec``, or None (unreadable == miss)."""

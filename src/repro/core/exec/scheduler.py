@@ -46,8 +46,15 @@ from repro.memsim import PrefetchMetrics
 _LAST_TRACE: Optional[Tuple[Tuple[str, WorkloadSpec], WorkloadTrace]] = None
 
 
-def _materialize(spec: WorkloadSpec, cache_root: str) -> WorkloadTrace:
+def _materialize(spec: WorkloadSpec, cache_root: str) -> Optional[WorkloadTrace]:
     global _LAST_TRACE
+    if getattr(spec, "is_sharded", False):
+        # Sharded workloads materialize as a shard store + manifest, not a
+        # WorkloadTrace; nothing stays resident in the worker.
+        from repro.core.exec import sharded
+
+        sharded.ensure_shards(spec, ArtifactCache(cache_root))
+        return None
     key = (cache_root, spec)
     if _LAST_TRACE is not None and _LAST_TRACE[0] == key:
         return _LAST_TRACE[1]
@@ -66,6 +73,22 @@ def _run_task(task) -> Tuple[int, List[Tuple[str, PrefetchMetrics]]]:
 
     index, spec, prefetchers, cache_root = task
     debug = os.environ.get("REPRO_EXEC_DEBUG")
+    if getattr(spec, "is_sharded", False):
+        # Sharded tasks stream shards through the bounded-memory scorer;
+        # the shard store (cached by content key) is built on first touch.
+        from repro.core.exec import sharded
+
+        t0 = time.perf_counter()
+        scored = sharded.score_sharded(
+            spec, list(prefetchers), ArtifactCache(cache_root)
+        )
+        if debug:
+            print(
+                f"[worker {os.getpid()}] {spec.kernel}/{spec.dataset} "
+                f"sharded x{len(prefetchers)} {time.perf_counter() - t0:.1f}s",
+                flush=True,
+            )
+        return index, scored
     t0 = time.perf_counter()
     trace = _materialize(spec, cache_root)
     if debug:
@@ -267,8 +290,16 @@ def run_grid(
     # work.  Execution order never affects results — cells are
     # reassembled by key.
     def _cost(task):
+        spec = task[0]
+        if getattr(spec, "is_sharded", False):
+            # The manifest is tiny; rank by the trace length it describes
+            # (8 bytes/access as the size proxy).  Unbuilt stores rank first.
+            manifest = artifacts.load_manifest(spec)
+            if manifest is None:
+                return float("inf")
+            return 8.0 * manifest["num_accesses"] * len(task[1])
         try:
-            return artifacts.path_for(task[0]).stat().st_size * len(task[1])
+            return artifacts.path_for(spec).stat().st_size * len(task[1])
         except OSError:
             return float("inf")
 

@@ -389,6 +389,34 @@ class Experiment:
         cells: List[CellResult] = []
         traces: Dict[WorkloadSpec, WorkloadTrace] = {}
         for spec in self.workload_specs:
+            if getattr(spec, "is_sharded", False):
+                # Sharded cells stream from the on-disk shard store (never a
+                # whole WorkloadTrace), so they always need an artifact cache
+                # — attach the default one exactly as the parallel path does.
+                from repro.core.exec import sharded
+
+                if self.cache.artifacts is None:
+                    self.cache.artifacts = ArtifactCache()
+                for name, m in sharded.score_sharded(
+                    spec, self.prefetchers, self.cache.artifacts
+                ):
+                    cells.append(
+                        CellResult(
+                            kernel=spec.kernel,
+                            dataset=spec.dataset,
+                            prefetcher=name,
+                            seed=spec.seed,
+                            metrics=m,
+                            spec=spec,
+                        )
+                    )
+                    if verbose:
+                        print(
+                            f"[{spec.kernel}/{spec.dataset}] {name}: "
+                            f"speedup {m.speedup:.2f} coverage {m.coverage:.2f} "
+                            f"accuracy {m.accuracy:.2f}"
+                        )
+                continue
             w = self.cache.get_or_build(spec)
             traces[spec] = w
             for name, gen in self.prefetchers:
@@ -582,8 +610,15 @@ class Experiment:
         ]
         # Workers persisted their traces in the artifact store; materialize
         # them lazily so runs that only read metrics never pay the loads.
+        # Sharded cells have no whole-trace artifact to load, so they are
+        # never part of the workloads mapping (serial runs agree).
         workloads = _LazyWorkloads(
-            self.cache.get_or_build, dict.fromkeys(self.workload_specs)
+            self.cache.get_or_build,
+            dict.fromkeys(
+                s
+                for s in self.workload_specs
+                if not getattr(s, "is_sharded", False)
+            ),
         )
         return ExperimentResult(cells=cells, workloads=workloads)
 

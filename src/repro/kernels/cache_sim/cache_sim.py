@@ -52,6 +52,76 @@ def _lru_tile_kernel(blocks_ref, hits_ref, tags_ref, age_ref):
     jax.lax.fori_loop(0, steps, body, 0)
 
 
+def _lru_tile_kernel_carry(
+    blocks_ref, tags_in_ref, age_in_ref, hits_ref, tags_out_ref, age_out_ref
+):
+    # Carry variant: tag/age state enters as inputs and leaves as outputs,
+    # so chunked passes resume exactly where the previous chunk stopped.
+    # Pad steps (b == -1) still emit a (never-gathered) hit bit but are
+    # masked out of the update — a pad must not evict a carried line or
+    # refresh an empty way's age in the state handed back to the host.
+    ways = tags_in_ref.shape[1]
+    tags_out_ref[...] = tags_in_ref[...]
+    age_out_ref[...] = age_in_ref[...]
+    steps = blocks_ref.shape[1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, ways), 1)
+
+    def body(t, carry):
+        b = blocks_ref[:, pl.ds(t, 1)]  # (set_tile, 1)
+        tags = tags_out_ref[...]
+        age = age_out_ref[...]
+        hitv = tags == b
+        hit = hitv.any(axis=1, keepdims=True)
+        way = jnp.where(
+            hit,
+            jnp.argmax(hitv, axis=1, keepdims=True),
+            jnp.argmin(age, axis=1, keepdims=True),
+        ).astype(jnp.int32)
+        onehot = (way == lanes) & (b >= 0)  # (set_tile, ways)
+        tags_out_ref[...] = jnp.where(onehot, b, tags)
+        age_out_ref[...] = jnp.where(onehot, t + 1, age)
+        hits_ref[:, pl.ds(t, 1)] = hit.astype(jnp.int32)
+        return carry
+
+    jax.lax.fori_loop(0, steps, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("set_tile", "interpret"))
+def lru_hits_carry(
+    padded: jnp.ndarray,  # (sets, L) int32 substream matrix, tail-padded -1
+    tags0: jnp.ndarray,  # (sets, ways) int32 carried tags (-1 empty)
+    age0: jnp.ndarray,  # (sets, ways) int32 carried ages
+    set_tile: int = 8,
+    interpret: bool = False,
+):
+    """Hit mask plus final (raw) tag/age state, resuming from a carry."""
+    sets, length = padded.shape
+    ways = tags0.shape[1]
+    assert sets % set_tile == 0, (sets, set_tile)
+    grid = (sets // set_tile,)
+    state_spec = pl.BlockSpec((set_tile, ways), lambda i: (i, 0))
+    return pl.pallas_call(
+        _lru_tile_kernel_carry,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((set_tile, length), lambda i: (i, 0)),
+            state_spec,
+            state_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((set_tile, length), lambda i: (i, 0)),
+            state_spec,
+            state_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sets, length), jnp.int32),
+            jax.ShapeDtypeStruct((sets, ways), jnp.int32),
+            jax.ShapeDtypeStruct((sets, ways), jnp.int32),
+        ],
+        interpret=interpret,
+    )(padded, tags0, age0)
+
+
 @functools.partial(jax.jit, static_argnames=("ways", "set_tile", "interpret"))
 def lru_hits(
     padded: jnp.ndarray,  # (sets, L) int32 substream matrix, tail-padded -1

@@ -16,10 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.cache_sim.cache_sim import lru_hits
+from repro.kernels.cache_sim.cache_sim import lru_hits, lru_hits_carry
 from repro.kernels.cache_sim.ref import lru_hits_ref
 
-__all__ = ["cache_pass_pallas", "lru_hits", "lru_hits_ref"]
+__all__ = ["cache_pass_pallas", "lru_hits", "lru_hits_carry", "lru_hits_ref"]
 
 
 def cache_pass_pallas(
@@ -28,25 +28,47 @@ def cache_pass_pallas(
     ways: int,
     set_tile: Optional[int] = None,
     interpret: Optional[bool] = None,
-) -> np.ndarray:
+    state=None,
+    return_state: bool = False,
+):
     """Hit mask of one cache level, computed by the Pallas kernel.
 
     Same contract (and bit-identical output) as
-    :func:`repro.memsim.engine.cache_pass`.
+    :func:`repro.memsim.engine.cache_pass`, including the canonical
+    :class:`~repro.memsim.engine.CacheState` carry for chunked passes.
     """
-    if len(blocks) == 0:
-        return np.zeros(0, dtype=bool)
-    from repro.memsim.engine import group_by_set  # lazy: avoids import cycle
+    from repro.memsim import engine  # lazy: avoids import cycle
 
+    if len(blocks) == 0:
+        hits = np.zeros(0, dtype=bool)
+        if not return_state:
+            return hits
+        st = state if state is not None else engine.init_state(sets, ways)
+        return hits, engine.CacheState(st.tags.copy(), st.age.copy())
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if set_tile is None:
         set_tile = min(sets, 8)
-    padded, order, col, row = group_by_set(blocks, sets)
+    padded, order, col, row = engine.group_by_set(blocks, sets)
     mat = np.ascontiguousarray(padded.T)  # (sets, L): sets->sublanes
-    hits = np.asarray(
-        lru_hits(jnp.asarray(mat), ways, set_tile=set_tile, interpret=interpret)
-    )
+    if state is None and not return_state:
+        hits = np.asarray(
+            lru_hits(
+                jnp.asarray(mat), ways, set_tile=set_tile, interpret=interpret
+            )
+        )
+    else:
+        st = state if state is not None else engine.init_state(sets, ways)
+        hits, tags1, age1 = lru_hits_carry(
+            jnp.asarray(mat),
+            jnp.asarray(st.tags),
+            jnp.asarray(st.age),
+            set_tile=set_tile,
+            interpret=interpret,
+        )
+        hits = np.asarray(hits)
     out = np.zeros(len(blocks), dtype=bool)
     out[order] = hits[row, col].astype(bool)
-    return out
+    if not return_state:
+        return out
+    return out, engine.canonicalize_state(np.asarray(tags1), np.asarray(age1))

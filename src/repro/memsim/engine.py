@@ -20,22 +20,39 @@ a batch of short, concurrent per-set simulations:
 Engines (pick with ``REPRO_CACHE_ENGINE``, :func:`set_engine`, or the
 :func:`use_engine` context manager):
 
-- ``set_parallel`` (default): the padded batched ``lax.scan`` described
-  above.  Hit masks are bit-identical to the reference — the per-set age
-  counters preserve the reference's relative LRU order and tie-breaking
+- ``set_parallel``: the padded batched ``lax.scan`` described above.  Hit
+  masks are bit-identical to the reference — the per-set age counters
+  preserve the reference's relative LRU order and tie-breaking
   (``argmin``/``argmax`` pick the lowest way index in both) — so
   ``TRACE_CODE_VERSION`` and every persisted workload artifact stay valid.
 - ``reference``: the original serial ``lax.scan``
   (:mod:`repro.memsim.scan_cache`), kept as the correctness oracle the
-  property tests and the bench parity gate compare against.
+  property tests and the bench parity gate compare against — including
+  across shard seams (see *carried state* below).
 - ``pallas``: the same set-parallel machine as a Pallas TPU kernel
   (:mod:`repro.kernels.cache_sim`), sets tiled across the grid with the
-  tag/age carry in VMEM scratch.  Gated on backend: off-TPU it runs in
-  interpret mode, which validates semantics but is not fast.
+  tag/age carry in VMEM scratch.  Off-TPU it runs in interpret mode,
+  which validates semantics but is not fast.
+
+The default engine is resolved per backend: ``pallas`` on TPU (the kernel
+is the native scoring path on accelerator), ``set_parallel`` everywhere
+else.  ``REPRO_CACHE_ENGINE`` overrides the resolution either way.
+
+**Carried state.**  Sharded traces stream through the simulator one chunk
+at a time, so every engine can resume a pass exactly where the previous
+chunk left off: ``cache_pass(..., state=..., return_state=True)`` threads a
+:class:`CacheState` in and out.  The returned state is *canonical* — per
+set, ways are re-aged to ``-ways..-1`` with empty ways first (in way-index
+order) and filled ways in LRU→MRU order — which makes it engine-independent
+(every engine emits the same canonical state for the same stream prefix)
+and makes resuming bit-identical to an uninterrupted pass: carried lines
+are strictly older than any new access (new passes count age from 1), and
+``argmin`` tie-breaking still prefers the lowest-index empty way.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import os
 from functools import lru_cache
 from typing import Iterator, Optional, Tuple
@@ -48,6 +65,7 @@ from repro.memsim import scan_cache
 
 ENGINES = ("set_parallel", "reference", "pallas")
 ENGINE_ENV = "REPRO_CACHE_ENGINE"
+# CPU/GPU default; see default_engine() for the backend-aware resolution.
 DEFAULT_ENGINE = "set_parallel"
 
 _override: Optional[str] = None
@@ -59,11 +77,23 @@ def _check(name: str) -> str:
     return name
 
 
+@lru_cache(maxsize=1)
+def default_engine() -> str:
+    """Backend-resolved default: the Pallas kernel on TPU, set-parallel
+    elsewhere (where the kernel would run in slow interpret mode)."""
+    try:
+        backend = jax.default_backend()
+    except Exception:  # backend discovery failed -> portable default
+        backend = "cpu"
+    return "pallas" if backend == "tpu" else DEFAULT_ENGINE
+
+
 def current_engine() -> str:
     """The active engine: ``set_engine`` override > env var > default."""
     if _override is not None:
         return _override
-    return _check(os.environ.get(ENGINE_ENV, DEFAULT_ENGINE))
+    env = os.environ.get(ENGINE_ENV)
+    return _check(env) if env is not None else default_engine()
 
 
 def set_engine(name: Optional[str]) -> None:
@@ -83,6 +113,58 @@ def use_engine(name: str) -> Iterator[None]:
         _override = prev
 
 
+@dataclasses.dataclass
+class CacheState:
+    """Canonical tag/LRU carry of one cache level between chunked passes.
+
+    ``tags`` is ``(sets, ways)`` int32 (-1 = empty way); ``age`` is
+    ``(sets, ways)`` int32 in the canonical form produced by
+    :func:`canonicalize_state`.  Engine-independent: resuming any engine
+    from this state is bit-identical to an uninterrupted pass.
+    """
+
+    tags: np.ndarray
+    age: np.ndarray
+
+    @property
+    def sets(self) -> int:
+        return self.tags.shape[0]
+
+    @property
+    def ways(self) -> int:
+        return self.tags.shape[1]
+
+
+def init_state(sets: int, ways: int) -> CacheState:
+    """Canonical all-empty state (what a cold pass starts from)."""
+    tags = np.full((sets, ways), -1, dtype=np.int32)
+    age = np.tile(np.arange(-ways, 0, dtype=np.int32), (sets, 1))
+    return CacheState(tags, age)
+
+
+def canonicalize_state(tags: np.ndarray, age: np.ndarray) -> CacheState:
+    """Re-age raw engine tag/age arrays into the canonical carry form.
+
+    Per set, ways are ranked empties-first (in way-index order, preserving
+    the ``argmin`` tie-break of a fresh pass) then filled ways by ascending
+    raw age (LRU -> MRU), and assigned ages ``rank - ways`` — all negative,
+    so a resumed pass (ages counted from 1) always sees carried lines as
+    older than anything it inserts.  Only the per-set *order* of the raw
+    ages matters, which is why engines with different age-counter schedules
+    (serial stream counter vs padded step counter) canonicalize to the
+    same state.
+    """
+    tags = np.asarray(tags, dtype=np.int32)
+    ways = tags.shape[1]
+    key = np.where(
+        tags == -1, np.iinfo(np.int64).min, np.asarray(age, dtype=np.int64)
+    )
+    order = np.argsort(key, axis=1, kind="stable")
+    rank = np.empty_like(order)
+    np.put_along_axis(rank, order, np.arange(ways, dtype=order.dtype)[None, :], axis=1)
+    return CacheState(tags.copy(), (rank - ways).astype(np.int32))
+
+
 def group_by_set(
     blocks: np.ndarray, sets: int
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
@@ -94,9 +176,10 @@ def group_by_set(
     permutation, and ``padded[col, row]`` are the real accesses in sorted
     order — scatter per-cell results back with ``out[order] = res[col, row]``.
 
-    Tail padding is harmless by construction: a pad cell can only perturb a
-    set's tag/age state *after* that set's last real access, so no real hit
-    bit depends on it (pad cells' outputs are simply never gathered).
+    Tail padding is harmless by construction: pad cells are masked out of
+    the tag/age update (``b >= 0`` guard), so they neither perturb a set's
+    state nor the carried state returned to the caller, and their hit bits
+    are never gathered.
     """
     blocks = np.asarray(blocks)
     # Guard here so every engine entry point (set-parallel, Pallas ops)
@@ -129,27 +212,30 @@ def _bucket_len(n: int) -> int:
 
 @lru_cache(maxsize=32)
 def _batched_pass(sets: int, ways: int):
-    """Jitted batched scan: every step advances all ``sets`` machines."""
+    """Jitted batched scan: every step advances all ``sets`` machines.
+
+    Takes the carried tag/age arrays as traced inputs and returns the
+    final state alongside the hit matrix; pad steps (``b == -1``) emit a
+    (never-gathered) bit but are masked out of the state update.
+    """
 
     def step(carry, b):
         tags, age, t = carry  # (sets, ways), (sets, ways), scalar
         hitv = tags == b[:, None]
         hit = hitv.any(axis=1)
         way = jnp.where(hit, jnp.argmax(hitv, axis=1), jnp.argmin(age, axis=1))
-        onehot = way[:, None] == jnp.arange(tags.shape[1])[None, :]
+        onehot = (way[:, None] == jnp.arange(tags.shape[1])[None, :]) & (
+            b >= 0
+        )[:, None]
         tags = jnp.where(onehot, b[:, None], tags)
         age = jnp.where(onehot, t, age)
         return (tags, age, t + 1), hit
 
     @jax.jit
-    def run(padded):  # (max_len, sets) -> (max_len, sets) hits
-        init = (
-            jnp.full((sets, ways), -1, dtype=jnp.int32),
-            jnp.zeros((sets, ways), dtype=jnp.int32),
-            jnp.int32(1),
-        )
-        _, hits = jax.lax.scan(step, init, padded, unroll=4)
-        return hits
+    def run(padded, tags0, age0):  # (max_len, sets) -> hits + final state
+        init = (tags0, age0, jnp.int32(1))
+        (tags1, age1, _), hits = jax.lax.scan(step, init, padded, unroll=4)
+        return hits, tags1, age1
 
     return run
 
@@ -165,46 +251,77 @@ _PAD_FACTOR = 4
 _PAD_FLOOR_CELLS = 1 << 22
 
 
-def cache_pass_set_parallel(blocks: np.ndarray, sets: int, ways: int) -> np.ndarray:
+def cache_pass_set_parallel(
+    blocks: np.ndarray,
+    sets: int,
+    ways: int,
+    state: Optional[CacheState] = None,
+    return_state: bool = False,
+):
     counts = np.bincount(
         np.asarray(blocks, dtype=np.int64) & (sets - 1), minlength=sets
     )
     cells = _bucket_len(int(counts.max(initial=0))) * sets
     if cells > max(_PAD_FACTOR * len(blocks), _PAD_FLOOR_CELLS):
-        return scan_cache.cache_pass(blocks, sets, ways)  # bit-identical
+        # bit-identical fallback (canonical states compose across engines)
+        return scan_cache.cache_pass(blocks, sets, ways, state, return_state)
     padded, order, col, row = group_by_set(blocks, sets)
-    hits = np.asarray(_batched_pass(sets, ways)(jnp.asarray(padded)))
+    st = state if state is not None else init_state(sets, ways)
+    hits, tags1, age1 = _batched_pass(sets, ways)(
+        jnp.asarray(padded), jnp.asarray(st.tags), jnp.asarray(st.age)
+    )
+    hits = np.asarray(hits)
     out = np.zeros(len(blocks), dtype=bool)
     out[order] = hits[col, row]
-    return out
+    if not return_state:
+        return out
+    return out, canonicalize_state(np.asarray(tags1), np.asarray(age1))
 
 
-def cache_pass(blocks: np.ndarray, sets: int, ways: int) -> np.ndarray:
+def cache_pass(
+    blocks: np.ndarray,
+    sets: int,
+    ways: int,
+    state: Optional[CacheState] = None,
+    return_state: bool = False,
+):
     """Run an access stream through one cache level; returns the hit mask.
 
     Dispatches to the active engine (see module docstring); every engine
-    honors the same contract and produces bit-identical masks.
+    honors the same contract and produces bit-identical masks.  With
+    ``state=`` the pass resumes from a carried :class:`CacheState` (as
+    returned by a prior ``return_state=True`` call) and is bit-identical
+    to one uninterrupted pass over the concatenated stream.
     """
     if len(blocks) == 0:
-        return np.zeros(0, dtype=bool)
+        hits = np.zeros(0, dtype=bool)
+        if not return_state:
+            return hits
+        st = state if state is not None else init_state(sets, ways)
+        return hits, CacheState(st.tags.copy(), st.age.copy())
     assert blocks.max(initial=0) < 2**31, "block ids must fit in int32"
     engine = current_engine()
     if engine == "reference":
-        return scan_cache.cache_pass(blocks, sets, ways)
+        return scan_cache.cache_pass(blocks, sets, ways, state, return_state)
     if engine == "pallas":
         from repro.kernels.cache_sim.ops import cache_pass_pallas
 
-        return cache_pass_pallas(blocks, sets, ways)
-    return cache_pass_set_parallel(blocks, sets, ways)
+        return cache_pass_pallas(blocks, sets, ways, state=state,
+                                 return_state=return_state)
+    return cache_pass_set_parallel(blocks, sets, ways, state, return_state)
 
 
 __all__ = [
     "ENGINES",
     "ENGINE_ENV",
+    "CacheState",
     "cache_pass",
     "cache_pass_set_parallel",
+    "canonicalize_state",
     "current_engine",
+    "default_engine",
     "group_by_set",
+    "init_state",
     "set_engine",
     "use_engine",
 ]

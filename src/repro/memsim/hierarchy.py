@@ -16,7 +16,7 @@ import dataclasses
 import numpy as np
 
 from repro.memsim.config import HierarchyConfig
-from repro.memsim.engine import cache_pass
+from repro.memsim.engine import CacheState, cache_pass, init_state
 from repro.memsim.scan_cache import classify_prefetch_events
 
 
@@ -78,20 +78,82 @@ class DemandProfile:
         )
 
 
+@dataclasses.dataclass
+class DemandState:
+    """Carried hierarchy state for chunked (sharded) demand simulation.
+
+    Bundles the canonical per-level :class:`CacheState` carries plus the
+    global position of the next access, so a sequence of
+    :func:`simulate_demand` calls over trace chunks produces profiles whose
+    concatenation is bit-identical to one whole-trace call — the shard-seam
+    contract the streaming scorer builds on.
+    """
+
+    l1: CacheState
+    l2: CacheState
+    llc: CacheState
+    pos_offset: int = 0
+
+
+def demand_init_state(cfg: HierarchyConfig) -> DemandState:
+    """Cold-cache carry (equivalent to passing ``state=None``)."""
+    return DemandState(
+        l1=init_state(cfg.l1.sets, cfg.l1.ways),
+        l2=init_state(cfg.l2.sets, cfg.l2.ways),
+        llc=init_state(cfg.llc.sets, cfg.llc.ways),
+        pos_offset=0,
+    )
+
+
 def simulate_demand(
-    blocks: np.ndarray, iter_id: np.ndarray, cfg: HierarchyConfig
-) -> DemandProfile:
+    blocks: np.ndarray,
+    iter_id: np.ndarray,
+    cfg: HierarchyConfig,
+    state: DemandState | None = None,
+    return_state: bool = False,
+):
+    """Baseline demand simulation; optionally resuming from / yielding a
+    :class:`DemandState` carry for chunked traces.  With a carry, ``l2_pos``
+    is expressed in *global* trace positions (``state.pos_offset`` +
+    chunk-local index), keeping windowed metrics chunk-invariant."""
+    offset = 0
+    if state is not None:
+        offset = state.pos_offset
     with _stage("cache_pass[l1]"):
-        l1_hit = cache_pass(blocks, cfg.l1.sets, cfg.l1.ways)
-    l2_pos = np.flatnonzero(~l1_hit).astype(np.int64)
-    l2_blocks = blocks[l2_pos]
-    l2_iter = iter_id[l2_pos]
+        l1_hit = cache_pass(
+            blocks,
+            cfg.l1.sets,
+            cfg.l1.ways,
+            state=state.l1 if state is not None else None,
+            return_state=return_state,
+        )
+        if return_state:
+            l1_hit, l1_state = l1_hit
+    l2_pos = np.flatnonzero(~l1_hit).astype(np.int64) + offset
+    l2_blocks = blocks[l2_pos - offset]
+    l2_iter = iter_id[l2_pos - offset]
     with _stage("cache_pass[l2]"):
-        l2_hit = cache_pass(l2_blocks, cfg.l2.sets, cfg.l2.ways)
+        l2_hit = cache_pass(
+            l2_blocks,
+            cfg.l2.sets,
+            cfg.l2.ways,
+            state=state.l2 if state is not None else None,
+            return_state=return_state,
+        )
+        if return_state:
+            l2_hit, l2_state = l2_hit
     llc_in = l2_blocks[~l2_hit]
     with _stage("cache_pass[llc]"):
-        llc_hit = cache_pass(llc_in, cfg.llc.sets, cfg.llc.ways)
-    return DemandProfile(
+        llc_hit = cache_pass(
+            llc_in,
+            cfg.llc.sets,
+            cfg.llc.ways,
+            state=state.llc if state is not None else None,
+            return_state=return_state,
+        )
+        if return_state:
+            llc_hit, llc_state = llc_hit
+    profile = DemandProfile(
         blocks=blocks,
         iter_id=iter_id,
         l1_hit=l1_hit,
@@ -102,6 +164,12 @@ def simulate_demand(
         llc_hit=llc_hit,
         cfg=cfg,
     )
+    if not return_state:
+        return profile
+    next_state = DemandState(
+        l1=l1_state, l2=l2_state, llc=llc_state, pos_offset=offset + len(blocks)
+    )
+    return profile, next_state
 
 
 @dataclasses.dataclass

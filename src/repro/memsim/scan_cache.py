@@ -45,30 +45,48 @@ def _plain_pass(sets: int, ways: int):
         return (tags, age, t + 1), hit
 
     @jax.jit
-    def run(blocks):
-        init = (
-            jnp.full((sets, ways), -1, dtype=jnp.int32),
-            jnp.zeros((sets, ways), dtype=jnp.int32),
-            jnp.int32(1),
-        )
-        _, hits = jax.lax.scan(step, init, blocks)
-        return hits
+    def run(blocks, tags0, age0):
+        init = (tags0, age0, jnp.int32(1))
+        (tags1, age1, _), hits = jax.lax.scan(step, init, blocks)
+        return hits, tags1, age1
 
     return run
 
 
-def cache_pass(blocks: np.ndarray, sets: int, ways: int) -> np.ndarray:
+def cache_pass(
+    blocks: np.ndarray,
+    sets: int,
+    ways: int,
+    state=None,
+    return_state: bool = False,
+):
     """Reference hit mask for one cache level (serial per-access scan).
 
     Prefer :func:`repro.memsim.engine.cache_pass`, which dispatches to the
     set-parallel engine by default and to this function under the
-    ``reference`` engine.
+    ``reference`` engine.  ``state``/``return_state`` thread the canonical
+    :class:`repro.memsim.engine.CacheState` carry across chunked passes.
     """
+    from repro.memsim import engine  # deferred: engine imports this module
+
     if len(blocks) == 0:
-        return np.zeros(0, dtype=bool)
+        hits = np.zeros(0, dtype=bool)
+        if not return_state:
+            return hits
+        st = state if state is not None else engine.init_state(sets, ways)
+        return hits, engine.CacheState(st.tags.copy(), st.age.copy())
     assert blocks.max(initial=0) < 2**31, "block ids must fit in int32"
     run = _plain_pass(sets, ways)
-    return np.asarray(run(jnp.asarray(blocks, dtype=jnp.int32)))
+    st = state if state is not None else engine.init_state(sets, ways)
+    hits, tags1, age1 = run(
+        jnp.asarray(blocks, dtype=jnp.int32),
+        jnp.asarray(st.tags),
+        jnp.asarray(st.age),
+    )
+    hits = np.asarray(hits)
+    if not return_state:
+        return hits
+    return hits, engine.canonicalize_state(np.asarray(tags1), np.asarray(age1))
 
 
 def classify_prefetch_events(

@@ -61,12 +61,19 @@ def estimate_cycles(
     cfg: HierarchyConfig,
     tm: TimingModel = TimingModel(),
     late_miss_cost: float = 0.0,
+    mlp_llc: float | None = None,
+    mlp_dram: float | None = None,
 ) -> float:
     """``late_miss_cost``: average cost of the miss a late prefetch avoided,
     computed from the *baseline* run (a late prefetch can never be worse than
-    the miss it replaced)."""
-    mlp_llc = measure_mlp(l2_miss_pos, tm.mlp_window, tm.mlp_cap_llc)
-    mlp_dram = measure_mlp(dram_pos, tm.mlp_window, tm.mlp_cap_dram)
+    the miss it replaced).  ``mlp_llc``/``mlp_dram`` accept precomputed MLP
+    values (the streaming scorer measures them from spilled position streams
+    with the exact :func:`measure_mlp` arithmetic) — ``None`` measures them
+    from the in-memory position arrays as before."""
+    if mlp_llc is None:
+        mlp_llc = measure_mlp(l2_miss_pos, tm.mlp_window, tm.mlp_cap_llc)
+    if mlp_dram is None:
+        mlp_dram = measure_mlp(dram_pos, tm.mlp_window, tm.mlp_cap_dram)
     # Bandwidth queueing from extra (prefetch + metadata) DRAM traffic.
     extra_ratio = max(dram_total / max(dram_baseline, 1) - 1.0, 0.0)
     dram_eff = cfg.dram_latency * (1.0 + tm.bw_sensitivity * extra_ratio)
@@ -87,12 +94,16 @@ def avg_miss_cost(
     dram_pos: np.ndarray,
     cfg: HierarchyConfig,
     tm: TimingModel = TimingModel(),
+    mlp_llc: float | None = None,
+    mlp_dram: float | None = None,
 ) -> float:
     """Average per-L2-miss stall cost of a run (used as the avoided cost)."""
     if l2_misses <= 0:
         return 0.0
-    mlp_llc = measure_mlp(l2_miss_pos, tm.mlp_window, tm.mlp_cap_llc)
-    mlp_dram = measure_mlp(dram_pos, tm.mlp_window, tm.mlp_cap_dram)
+    if mlp_llc is None:
+        mlp_llc = measure_mlp(l2_miss_pos, tm.mlp_window, tm.mlp_cap_llc)
+    if mlp_dram is None:
+        mlp_dram = measure_mlp(dram_pos, tm.mlp_window, tm.mlp_cap_dram)
     llc_hits = max(l2_misses - dram_misses, 0)
     total = (
         cfg.llc.latency * llc_hits / mlp_llc

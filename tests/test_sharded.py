@@ -1,0 +1,327 @@
+"""Sharded paper-scale scoring: split-at-any-boundary bit-exactness.
+
+The streaming path's contract is that chopping a trace at ANY boundary —
+including empty and single-access shards — changes nothing: carried
+cache state resumes every engine bit-identically, chunked emission
+concatenates to the whole-run trace, the streaming metric primitives
+(spilled MLP, chained classification, the composite scorer) reproduce
+their whole-trace counterparts exactly, and ``score_sharded`` returns
+the same metric rows as the unsharded ``score_prefetcher`` path, both
+standalone and through the Experiment scheduler.
+"""
+
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.apps import get_kernel
+from repro.apps.trace import TraceConfig, iter_run_trace_chunks, trace_run
+from repro.core import (
+    ArtifactCache,
+    Experiment,
+    WorkloadCache,
+    WorkloadSpec,
+    score_prefetcher,
+)
+from repro.core.exec.scheduler import rows_equal
+from repro.core.exec.sharded import (
+    ShardedScoringError,
+    ShardedSpec,
+    score_sharded,
+)
+from repro.core.registry import resolve_prefetchers
+from repro.graphs import make_dataset
+from repro.memsim import simulate_demand, use_engine
+from repro.memsim.config import SCALED
+from repro.memsim.engine import ENGINES, cache_pass
+from repro.memsim.hierarchy import simulate_with_prefetch
+from repro.memsim.metrics import _outcome_cycles
+from repro.memsim.streaming import (
+    BlockPosTable,
+    ClassifyCarry,
+    CompositeRunScorer,
+    SpillFile,
+    classify_chunk,
+    spilled_mlp,
+)
+from repro.memsim.timing import TimingModel, measure_mlp
+
+
+def _boundaries(rng, n, n_cuts):
+    """Chunk boundaries over [0, n] with empty and size-1 chunks forced.
+
+    Returned sorted but NOT deduplicated: a repeated cut is an empty
+    chunk, and the forced ``mid, mid, mid + 1`` triple yields both an
+    empty and a single-access chunk.
+    """
+    cuts = rng.integers(0, n + 1, size=n_cuts)
+    mid = int(rng.integers(0, n))
+    extra = [mid, mid, min(mid + 1, n)]
+    return np.sort(np.concatenate([[0], cuts, extra, [n]]))
+
+
+# ------------------------------------------------------------ engine carry
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_cache_pass_carry_splits_at_any_boundary(engine):
+    rng = np.random.default_rng(7)
+    n, sets, ways = 3000, 16, 4
+    blocks = rng.integers(0, 97, size=n).astype(np.int64) + (1 << 22)
+    with use_engine(engine):
+        whole, end = cache_pass(blocks, sets, ways, return_state=True)
+        bounds = _boundaries(rng, n, 9)
+        got, state = [], None
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            hits, state = cache_pass(
+                blocks[lo:hi], sets, ways, state=state, return_state=True
+            )
+            got.append(hits)
+    np.testing.assert_array_equal(np.concatenate(got), whole)
+    np.testing.assert_array_equal(state.tags, end.tags)
+    np.testing.assert_array_equal(state.age, end.age)
+
+
+# ------------------------------------------------------- chunked emission
+
+
+def test_chunked_emission_concatenates_to_whole_run():
+    ks = get_kernel("bfs")
+    g = make_dataset("tiny", weighted=ks.weighted)
+    run = ks.run(g)
+    cfg = TraceConfig(g.num_vertices, g.num_edges)
+    whole = trace_run(run, cfg)
+    for max_accesses in (1 << 12, 1 << 30):
+        chunks = list(iter_run_trace_chunks(run, cfg, max_accesses))
+        assert chunks[0][0] == 0
+        if max_accesses == 1 << 30:
+            assert len(chunks) == 1
+        else:
+            assert len(chunks) > 1
+        for field in ("array_id", "elem", "addr", "block", "src_vertex"):
+            np.testing.assert_array_equal(
+                np.concatenate([getattr(t, field) for _, t in chunks]),
+                getattr(whole, field),
+            )
+        sizes = np.concatenate([t.iter_sizes for _, t in chunks])
+        np.testing.assert_array_equal(
+            np.concatenate([[0], np.cumsum(sizes)]), whole.iter_bounds
+        )
+
+
+# ------------------------------------------------- streaming primitives
+
+
+def test_spilled_mlp_matches_measure_mlp(tmp_path):
+    rng = np.random.default_rng(3)
+    for trial in range(8):
+        n = int(rng.integers(0, 3000))
+        pos = np.unique(rng.integers(0, 12000, size=n).astype(np.int64))
+        window = int(rng.integers(1, 60))
+        cap = float(rng.uniform(1.0, 8.0))
+        sp = SpillFile(str(tmp_path / f"mlp{trial}.i64"), cols=1)
+        i = 0
+        while i < len(pos):
+            step = int(rng.integers(0, 500))
+            sp.append(pos[i : i + step])  # step == 0 is an empty append
+            i += step if step else 1
+        assert spilled_mlp(sp, window, cap, rows=257) == measure_mlp(
+            pos, window, cap
+        )
+        sp.close()
+
+
+def test_classify_chunk_chained_matches_single_call():
+    rng = np.random.default_rng(11)
+    for trial in range(10):
+        n = int(rng.integers(2, 2500))
+        blocks = rng.integers(0, 60, size=n).astype(np.int64) + (1 << 22)
+        pos2 = np.cumsum(rng.integers(1, 3, size=n)).astype(np.int64)
+        is_pf = rng.random(n) < 0.5
+        issuer = rng.integers(0, 2, size=n).astype(np.int8)
+        # A real LRU pass: classification assumes every per-block chain
+        # segment starts at a fill, which random hit masks would violate.
+        hit = cache_pass(blocks, 8, 2)
+        fw2 = 2 * int(rng.integers(1, 40))
+        t0 = int(rng.integers(0, int(pos2[-1] >> 1) + 1))
+
+        single, _ = classify_chunk(
+            ClassifyCarry.empty(), blocks, is_pf, pos2, hit, issuer, fw2, t0, 1
+        )
+        bounds = _boundaries(rng, n, 7)
+        carry = ClassifyCarry.empty()
+        total = None
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            counts, carry = classify_chunk(
+                carry,
+                blocks[lo:hi],
+                is_pf[lo:hi],
+                pos2[lo:hi],
+                hit[lo:hi],
+                issuer[lo:hi],
+                fw2,
+                t0,
+                1,
+            )
+            if total is None:
+                total = counts
+            else:
+                total = {k: total[k] + v for k, v in counts.items()}
+        assert total == single, trial
+
+
+def test_composite_scorer_chunked_matches_whole_trace(tmp_path):
+    rng = np.random.default_rng(5)
+    cfg, tm = SCALED, TimingModel()
+    for trial in range(4):
+        n = int(rng.integers(400, 4000))
+        blocks = rng.integers(0, 150, size=n).astype(np.int64) + (1 << 22)
+        iter_id = np.sort(rng.integers(0, 5, size=n)).astype(np.int32)
+        profile = simulate_demand(blocks, iter_id, cfg)
+        t0 = int(rng.integers(0, n))
+
+        npf = int(rng.integers(0, 2 * len(profile.l2_pos) + 2))
+        pf_pos = rng.integers(0, n, size=npf).astype(np.int64)
+        pf_blocks = rng.integers(0, 150, size=npf).astype(np.int64) + (1 << 22)
+        pf_issuer = rng.integers(0, 2, size=npf).astype(np.int8)
+        # The sharded contract pre-sorts the prefetch stream globally
+        # (stable), so per-chunk slices reproduce the whole-trace merge.
+        o = np.argsort(pf_pos, kind="stable")
+        pf_pos, pf_blocks, pf_issuer = pf_pos[o], pf_blocks[o], pf_issuer[o]
+
+        outcome = simulate_with_prefetch(profile, pf_blocks, pf_pos, pf_issuer)
+        base = profile.baseline_counts(t0)
+        want_cycles, want_counts = _outcome_cycles(
+            profile, outcome, t0, tm, base["dram"], 7.5, 3
+        )
+
+        table = BlockPosTable()
+        for j in range(0, len(profile.l2_miss_blocks), 173):
+            table.update(
+                profile.l2_miss_blocks[j : j + 173],
+                profile.l2_miss_pos[j : j + 173],
+            )
+
+        bounds = _boundaries(rng, n, 8)
+        sc = CompositeRunScorer(
+            cfg, t0, str(tmp_path), f"t{trial}", sel_issuer=1, no_future=table
+        )
+        for a0, a1 in zip(bounds[:-1], bounds[1:]):
+            dlo, dhi = np.searchsorted(profile.l2_pos, [a0, a1])
+            plo, phi = np.searchsorted(pf_pos, [a0, a1])
+            sc.feed(
+                profile.l2_pos[dlo:dhi],
+                profile.l2_blocks[dlo:dhi],
+                pf_blocks[plo:phi],
+                pf_pos[plo:phi],
+                pf_issuer[plo:phi],
+            )
+        got_cycles, got_counts = sc.finalize(base, base["dram"], 7.5, 3, tm)
+        assert got_counts == want_counts, trial
+        assert got_cycles == want_cycles, trial
+
+
+def test_block_pos_table_sparse_span_falls_back():
+    # Block ids spread past the dense-span cap demote to sorted rows and
+    # keep answering identically.
+    table = BlockPosTable()
+    table.update(np.array([100, 200]), np.array([5, 9]))
+    assert table._dense is not None
+    table.update(np.array([100 + (1 << 30)]), np.array([12]))
+    assert table._dense is None and len(table) == 3
+    q = np.array([100, 200, 100 + (1 << 30), 77])
+    np.testing.assert_array_equal(
+        table.has_later(q, np.array([4, 9, 11, 0])),
+        [True, False, True, False],
+    )
+
+
+# ------------------------------------------------------- sharded scoring
+
+
+@pytest.mark.parametrize("kernel", ["bfs", "pgd"])
+def test_score_sharded_matches_unsharded(kernel):
+    base = WorkloadSpec(kernel, "tiny")
+    trace = base.build()
+    pairs = resolve_prefetchers(["nextline2", "amc"])
+    un = [score_prefetcher(trace, n, g).row() for n, g in pairs]
+    # 1 << 30 is the single-shard degenerate case; 4096 forces many seams.
+    for shard_accesses in (4096, 1 << 30):
+        with tempfile.TemporaryDirectory() as td:
+            scored = score_sharded(
+                ShardedSpec(base=base, shard_accesses=shard_accesses),
+                pairs,
+                ArtifactCache(td),
+            )
+        assert [n for n, _ in scored] == ["nextline2", "amc"]
+        assert rows_equal(un, [m.row() for _, m in scored]), shard_accesses
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_score_sharded_matches_unsharded_per_engine(engine):
+    base = WorkloadSpec("bfs", "tiny")
+    pairs = resolve_prefetchers(["nextline2"])
+    with use_engine(engine):
+        trace = base.build()
+        un = [score_prefetcher(trace, n, g).row() for n, g in pairs]
+        with tempfile.TemporaryDirectory() as td:
+            scored = score_sharded(
+                ShardedSpec(base=base, shard_accesses=4096),
+                pairs,
+                ArtifactCache(td),
+            )
+    assert rows_equal(un, [m.row() for _, m in scored]), engine
+
+
+def test_unsupported_prefetcher_raises():
+    base = WorkloadSpec("bfs", "tiny")
+    with tempfile.TemporaryDirectory() as td:
+        with pytest.raises(ShardedScoringError, match="streaming adapter"):
+            score_sharded(
+                ShardedSpec(base=base, shard_accesses=4096),
+                resolve_prefetchers(["rnr"]),
+                ArtifactCache(td),
+            )
+
+
+def test_sharded_artifact_keys_move_with_shard_size(tmp_path):
+    arts = ArtifactCache(tmp_path)
+    base = WorkloadSpec("bfs", "tiny")
+    a = ShardedSpec(base=base, shard_accesses=4096)
+    b = ShardedSpec(base=base, shard_accesses=8192)
+    c = dataclasses.replace(a)
+    # Content-addressed: the manifest and every shard move when the spec
+    # (including the shard size) changes, and only then.
+    assert arts.path_for(a) != arts.path_for(b)
+    assert arts.path_for(a) == arts.path_for(c)
+    assert arts.shard_path(a, 0) != arts.shard_path(b, 0)
+    assert arts.shard_path(a, 0) != arts.shard_path(a, 1)
+    assert not arts.has(a)
+
+
+def test_experiment_runs_sharded_specs_serial_and_parallel():
+    base = WorkloadSpec("bfs", "tiny")
+    workloads = [base, ShardedSpec(base=base, shard_accesses=1 << 12)]
+    prefetchers = ["nextline2", "amc"]
+
+    with tempfile.TemporaryDirectory() as td:
+        serial = Experiment(
+            workloads=workloads,
+            prefetchers=prefetchers,
+            cache=WorkloadCache(artifacts=ArtifactCache(td)),
+        ).run(workers=1)
+        rows_s = [c.metrics.row() for c in serial.cells]
+        # The sharded cells must equal their unsharded twins in-run...
+        assert rows_equal(rows_s[:2], rows_s[2:])
+        assert len(serial.workloads) == 1  # lazy view skips sharded specs
+
+    with tempfile.TemporaryDirectory() as td:
+        par = Experiment(
+            workloads=workloads,
+            prefetchers=prefetchers,
+            cache=WorkloadCache(artifacts=ArtifactCache(td)),
+        ).run(workers=2)
+        # ...and the scheduler path must equal serial bit-for-bit.
+        assert rows_equal(rows_s, [c.metrics.row() for c in par.cells])

@@ -1,0 +1,135 @@
+"""Docs gate: link-check the documentation and execute its quickstarts.
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Checks, over ``README.md`` and every ``docs/*.md``:
+
+1. **Markdown links** ``[text](target)``: every relative target (no URL
+   scheme) must exist on disk (``#anchor`` suffixes are stripped;
+   pure-anchor and external links are skipped).
+2. **Backticked paths**: inline-code tokens that look like repo paths
+   (``src/...``, ``docs/...``, ``tests/...``, ``benchmarks/...``,
+   ``tools/...``, ``examples/...``, ``results/...``, or an UPPERCASE
+   root ``*.md``) must exist — the guard against docs rotting as modules
+   move.  Tokens containing glob/placeholder characters are skipped.
+3. **Quickstart blocks**: every fenced code block whose info string is
+   ``python exec`` runs in a fresh interpreter (``PYTHONPATH=src``, repo
+   root cwd) and must exit 0 — the documented examples are executed
+   against the tiny dataset on every push, not trusted.
+
+Exits non-zero listing every failure; CI's ``docs`` job runs this.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```([^\n]*)\n(.*?)^```", re.M | re.S)
+CODE_RE = re.compile(r"`([^`\n]+)`")
+PATH_PREFIXES = (
+    "src/",
+    "docs/",
+    "tests/",
+    "benchmarks/",
+    "tools/",
+    "examples/",
+    "results/",
+)
+PATH_TOKEN_RE = re.compile(r"^[A-Za-z0-9_][A-Za-z0-9_./-]*$")
+ROOT_MD_RE = re.compile(r"^[A-Z][A-Z_]*\.md$")
+
+
+def doc_files() -> list[Path]:
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+def strip_fences(text: str) -> str:
+    """Drop fenced code blocks so their contents aren't link/path-checked."""
+    return FENCE_RE.sub("", text)
+
+
+def check_links(path: Path, text: str) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(strip_fences(text)):
+        if "://" in target or target.startswith(("mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not (path.parent / rel).exists() and not (REPO / rel).exists():
+            errors.append(f"{path.name}: broken link -> {target}")
+    return errors
+
+
+def check_paths(path: Path, text: str) -> list[str]:
+    errors = []
+    for token in CODE_RE.findall(strip_fences(text)):
+        is_repo_path = token.startswith(PATH_PREFIXES) and PATH_TOKEN_RE.match(
+            token
+        )
+        if not (is_repo_path or ROOT_MD_RE.match(token)):
+            continue
+        if not (REPO / token).exists():
+            errors.append(f"{path.name}: dangling path reference `{token}`")
+    return errors
+
+
+def run_quickstarts(path: Path, text: str) -> list[str]:
+    errors = []
+    for n, (info, body) in enumerate(FENCE_RE.findall(text), 1):
+        if info.strip() != "python exec":
+            continue
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".py", prefix=f"docs_{path.stem}_", delete=False
+        ) as fh:
+            fh.write(body)
+            script = fh.name
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(REPO / "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        try:
+            proc = subprocess.run(
+                [sys.executable, script],
+                cwd=REPO,
+                env=env,
+                capture_output=True,
+                text=True,
+                timeout=600,
+            )
+        finally:
+            os.unlink(script)
+        if proc.returncode != 0:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()[-12:]
+            errors.append(
+                f"{path.name}: quickstart block #{n} exited "
+                f"{proc.returncode}:\n    " + "\n    ".join(tail)
+            )
+        else:
+            print(f"[check_docs] {path.name} block #{n}: OK")
+    return errors
+
+
+def main() -> int:
+    errors: list[str] = []
+    for path in doc_files():
+        text = path.read_text()
+        errors += check_links(path, text)
+        errors += check_paths(path, text)
+        errors += run_quickstarts(path, text)
+    if errors:
+        print(f"[check_docs] {len(errors)} failure(s):", file=sys.stderr)
+        for e in errors:
+            print("  " + e, file=sys.stderr)
+        return 1
+    print(f"[check_docs] {len(doc_files())} files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
