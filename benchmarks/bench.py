@@ -36,6 +36,17 @@ accesses).  Both children run against the shared persistent XLA
 compilation cache (warmed by one discarded run) so the gauge measures
 streaming state, not one-time compile transients.
 
+Schema v7 adds the scheduler section: the cost-aware ``workers=None``
+default is run against the warm cache (its :class:`SchedDecision` record
+is committed with the JSON, and a not-slower-than-``workers=1`` gate
+keeps the auto path honest), and a cold A/B pits the cost-aware
+pipelined schedule against the legacy phased ``workers=2`` schedule on
+fresh artifact dirs — both parity-gated against serial.  The stream
+section gains a zero-churn reuse cell exercising delta-aware epoch trace
+reuse (content-keyed epochs: unchanged graphs are cache hits, counted by
+``trace_reuse``) with a bit-identical reuse-vs-re-emission gate, plus the
+``pipeline_overlap`` stage from the overlapped epoch handoff.
+
 The dated JSONs accumulate as the repo's machine-readable perf trajectory;
 CI runs ``--smoke`` (1 kernel x 1 dataset x 3 prefetchers) on every push,
 uploads the JSON as a build artifact, and fails this script (exit 1) when
@@ -67,7 +78,7 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 # Three prefetchers spanning the suite's families: the paper's contribution
 # (amc), a spatial baseline (vldp), and a replay baseline (rnr).  The
@@ -129,6 +140,12 @@ SHARD_PARITY_ACCESSES = 1 << 14
 SHARD_GAUGE_ACCESSES = 1 << 16
 SHARD_RSS_CELLS = [("bfs", "comdblp", 0), ("bfs", "road-8m", 0)]
 SHARD_RSS_TOL = 0.10
+# Scheduler section (schema v7).  The auto (workers=None) warm run must
+# not lose to the pinned workers=1 reference beyond measurement noise,
+# and the cost-aware cold schedule must not lose to the legacy phased
+# workers=2 schedule it replaced (the BENCH_2026-08-07 inversion).
+SCHED_AUTO_TOL = 1.10
+SCHED_COLD_TOL = 1.05
 
 
 def _sharded_child(argv) -> int:
@@ -213,7 +230,7 @@ def _gauge_child_run(kernel, dataset, seed, shard_accesses, cache_dir):
     return json.loads(proc.stdout)
 
 
-def _grid_seconds(specs, pairs, cache_dir, workers):
+def _grid_seconds(specs, pairs, cache_dir, workers, pipeline=True):
     """Wall-clock one full grid evaluation; returns (seconds, result)."""
     from repro.core import Experiment, WorkloadCache
     from repro.core.exec.artifacts import ArtifactCache
@@ -221,10 +238,10 @@ def _grid_seconds(specs, pairs, cache_dir, workers):
     cache = WorkloadCache(artifacts=ArtifactCache(cache_dir))
     exp = Experiment(workloads=specs, prefetchers=pairs, cache=cache)
     t0 = time.perf_counter()
-    # workers is always explicit here: workers=1 pins the serial reference
-    # path (the default workers=None would auto-parallelize on multi-core
-    # hosts and corrupt the serial baselines/parity gates).
-    result = exp.run(workers=workers)
+    # Baselines and parity gates pin workers explicitly (workers=1 is the
+    # serial reference path); only the scheduler section passes
+    # workers=None to measure the cost model's own choice.
+    result = exp.run(workers=workers, pipeline=pipeline)
     return time.perf_counter() - t0, result
 
 
@@ -430,6 +447,82 @@ def main(argv=None) -> int:
                     file=sys.stderr,
                 )
 
+        # --- scheduler (schema v7): the cost-aware workers=None default,
+        # measured warm against the pinned workers=1 reference, then a
+        # cold A/B of the cost-aware schedule vs the legacy phased
+        # workers=2 schedule on fresh artifact dirs.  The committed
+        # SchedDecision documents *why* this host went serial or parallel.
+        sched_stages: dict = {}
+        with collect_stages(into=sched_stages):
+            auto_warm_s, auto_result = _grid_seconds(
+                specs, pairs, cache_dir, None
+            )
+        auto_parity = rows_equal(serial_rows, auto_result.rows())
+        parity = parity and auto_parity
+        warm1 = warm.get("1")
+        auto_not_slower = (
+            True if warm1 is None else auto_warm_s <= warm1 * SCHED_AUTO_TOL
+        )
+        auto_sched = auto_result.sched or {}
+        print(
+            f"[bench] sched auto warm: {auto_warm_s:.1f}s "
+            f"(mode {auto_sched.get('mode')}, "
+            f"workers {auto_sched.get('workers')}, "
+            f"parity {'ok' if auto_parity else 'FAILED'})"
+        )
+        if not auto_parity:
+            print(
+                "[bench] PARITY FAILURE: workers=None results diverge "
+                "from serial",
+                file=sys.stderr,
+            )
+        if not auto_not_slower:
+            print(
+                f"[bench] SCHED FAILURE: auto warm {auto_warm_s:.1f}s is "
+                f"slower than workers=1 warm {warm1:.1f}s "
+                f"(tolerance x{SCHED_AUTO_TOL})",
+                file=sys.stderr,
+            )
+
+        cold_ab = {}
+        for label, ab_workers, ab_pipe in (
+            ("auto_pipelined", None, True),
+            ("phased_workers2", 2, False),
+        ):
+            ab_dir = tempfile.mkdtemp(prefix="repro-bench-ab-")
+            try:
+                ab_s, ab_result = _grid_seconds(
+                    specs, pairs, ab_dir, ab_workers, pipeline=ab_pipe
+                )
+            finally:
+                shutil.rmtree(ab_dir, ignore_errors=True)
+            ab_same = rows_equal(serial_rows, ab_result.rows())
+            parity = parity and ab_same
+            cold_ab[label] = {"wallclock_s": ab_s, "parity": ab_same}
+            if ab_result.sched is not None:
+                cold_ab[label]["decision"] = ab_result.sched
+            print(
+                f"[bench] sched cold A/B {label}: {ab_s:.1f}s "
+                f"(parity {'ok' if ab_same else 'FAILED'})"
+            )
+            if not ab_same:
+                print(
+                    f"[bench] PARITY FAILURE: cold {label} results diverge "
+                    "from serial",
+                    file=sys.stderr,
+                )
+        cold_not_slower = (
+            cold_ab["auto_pipelined"]["wallclock_s"]
+            <= cold_ab["phased_workers2"]["wallclock_s"] * SCHED_COLD_TOL
+        )
+        if not cold_not_slower:
+            print(
+                "[bench] SCHED FAILURE: cost-aware cold schedule lost to "
+                "the legacy phased workers=2 schedule "
+                f"(tolerance x{SCHED_COLD_TOL})",
+                file=sys.stderr,
+            )
+
         # --- streaming subsystem (schema v3): one small multi-epoch
         # stream cell, with the stream-protocol stage breakdown and a
         # serial-vs-parallel parity gate of its own.
@@ -450,19 +543,85 @@ def main(argv=None) -> int:
             )
         stream_rows = stream_result.rows()
         print(f"[bench] stream serial cold: {stream_cold_s:.1f}s")
-        stream_warm_s, stream_par = _grid_seconds(
-            [stream_spec], stream_pairs, cache_dir, 2
-        )
+        stream_par_stages: dict = {}
+        with collect_stages(into=stream_par_stages):
+            stream_warm_s, stream_par = _grid_seconds(
+                [stream_spec], stream_pairs, cache_dir, 2
+            )
         stream_parity = rows_equal(stream_rows, stream_par.rows())
         parity = parity and stream_parity
         print(
             f"[bench] stream workers=2 warm: {stream_warm_s:.1f}s "
-            f"(parity {'ok' if stream_parity else 'FAILED'})"
+            f"(parity {'ok' if stream_parity else 'FAILED'}, overlap "
+            f"{stream_par_stages.get('pipeline_overlap', 0.0):.2f}s)"
         )
         if not stream_parity:
             print(
                 "[bench] PARITY FAILURE: stream workers=2 results diverge "
                 "from serial",
+                file=sys.stderr,
+            )
+
+        # --- delta-aware epoch trace reuse (schema v7): a zero-churn
+        # stream's epochs share one content key, so the cold run emits
+        # epoch 0 once and serves epochs 1..E-1 from the artifact cache
+        # (trace_reuse counts them); a warm rerun reuses every epoch.
+        # The reused trace must be bit-identical to a from-scratch
+        # re-emission of the same epoch.
+        from repro.core import WorkloadCache
+        from repro.stream import UniformChurn
+
+        reuse_spec = StreamSpec(
+            "pgd",
+            "comdblp",
+            UniformChurn(init_frac=1.0, del_frac=0.0, add_frac=0.0),
+            epochs=STREAM_EPOCHS,
+        )
+        print(
+            f"[bench] stream reuse: zero-churn {STREAM_EPOCHS}-epoch "
+            f"{reuse_spec.kernel}/{reuse_spec.dataset} cold"
+        )
+        reuse_cold_s, reuse_cold = _grid_seconds(
+            [reuse_spec], stream_pairs, cache_dir, 1
+        )
+        reuse_warm_s, reuse_warm = _grid_seconds(
+            [reuse_spec], stream_pairs, cache_dir, 1
+        )
+        reuse_counts_ok = (
+            reuse_cold.trace_reuse == STREAM_EPOCHS - 1
+            and reuse_warm.trace_reuse == STREAM_EPOCHS
+        )
+        from repro.core.exec.artifacts import ArtifactCache as _AC
+
+        last_epoch = reuse_spec.epoch_specs()[-1]
+        reused_trace = WorkloadCache(artifacts=_AC(cache_dir)).get_or_build(
+            last_epoch
+        )
+        fresh_trace = last_epoch.build()
+        reuse_bits_ok = all(
+            np.array_equal(getattr(reused_trace, f), getattr(fresh_trace, f))
+            for f in (
+                "block",
+                "array_id",
+                "elem",
+                "iter_id",
+                "epoch_id",
+                "nl_blocks",
+                "nl_pos",
+            )
+        )
+        del reused_trace, fresh_trace
+        reuse_ok = reuse_counts_ok and reuse_bits_ok
+        print(
+            f"[bench] stream reuse: cold {reuse_cold_s:.1f}s "
+            f"(trace_reuse {reuse_cold.trace_reuse}) warm {reuse_warm_s:.1f}s "
+            f"(trace_reuse {reuse_warm.trace_reuse}), reuse-vs-re-emission "
+            f"{'ok' if reuse_bits_ok else 'DIVERGED'}"
+        )
+        if not reuse_ok:
+            print(
+                "[bench] REUSE FAILURE: delta-aware epoch reuse diverges "
+                "from re-emission or miscounts cache hits",
                 file=sys.stderr,
             )
 
@@ -664,6 +823,24 @@ def main(argv=None) -> int:
         "speedup_vs_serial_cold": {
             w: serial_cold_s / s for w, s in warm.items() if s > 0
         },
+        # Schema v7: the cost-aware scheduler — the committed decision
+        # record for this host, the auto-vs-workers=1 warm gate, and the
+        # cold A/B against the legacy phased schedule.
+        "scheduler": {
+            "auto": {
+                "decision": auto_result.sched,
+                "warm_wallclock_s": auto_warm_s,
+                "warm_workers1_s": warm1,
+                "not_slower_than_workers1": auto_not_slower,
+                "tolerance": SCHED_AUTO_TOL,
+            },
+            "cold_ab": {
+                **cold_ab,
+                "pipelined_not_slower": cold_not_slower,
+                "tolerance": SCHED_COLD_TOL,
+            },
+            "stages_s": dict(sorted(sched_stages.items())),
+        },
         # Schema v3: the streaming-subsystem cell (3-epoch sliding-window
         # stream) with the stream-protocol stage timers.
         "stream": {
@@ -676,12 +853,30 @@ def main(argv=None) -> int:
                 "update_apply": stream_stages.get("update_apply", 0.0),
                 "trace_epoch": stream_stages.get("trace_epoch", 0.0),
                 "table_carry": stream_stages.get("table_carry", 0.0),
+                "pipeline_overlap": stream_par_stages.get(
+                    "pipeline_overlap", 0.0
+                ),
             },
             "wallclock_s": {
                 "serial_cold": stream_cold_s,
                 "warm_workers2": stream_warm_s,
             },
             "parallel_matches_serial": stream_parity,
+            # Schema v7: delta-aware epoch trace reuse (zero-churn cell).
+            "reuse": {
+                "churn": "zero_churn",
+                "epochs": STREAM_EPOCHS,
+                "wallclock_s": {
+                    "serial_cold": reuse_cold_s,
+                    "warm_serial": reuse_warm_s,
+                },
+                "trace_reuse": {
+                    "cold": reuse_cold.trace_reuse,
+                    "warm": reuse_warm.trace_reuse,
+                },
+                "counts_expected": reuse_counts_ok,
+                "matches_reemission": reuse_bits_ok,
+            },
         },
         # Schema v5: the serving-subsystem cells (K concurrent tenants
         # over one shared LLC, both AMC table modes) with the serving
@@ -710,6 +905,9 @@ def main(argv=None) -> int:
         "engine_matches_reference": engine_ok,
         "emitter_matches_reference": emitter_ok,
         "sharded_rss_flat": rss_flat,
+        "sched_auto_not_slower": auto_not_slower,
+        "sched_cold_pipelined_not_slower": cold_not_slower,
+        "trace_reuse_matches_reemission": reuse_ok,
     }
     out_dir = Path(args.out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -724,7 +922,19 @@ def main(argv=None) -> int:
         json.dump(out, f, indent=1)
         f.write("\n")
     print(f"[bench] wrote {out_path}")
-    return 0 if (parity and engine_ok and emitter_ok and rss_flat) else 1
+    return (
+        0
+        if (
+            parity
+            and engine_ok
+            and emitter_ok
+            and rss_flat
+            and auto_not_slower
+            and cold_not_slower
+            and reuse_ok
+        )
+        else 1
+    )
 
 
 if __name__ == "__main__":

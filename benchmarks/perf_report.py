@@ -67,9 +67,9 @@ def flatten_stages(doc: dict) -> dict:
     return flat
 
 
-def bench_trajectory(root: str = ".") -> tuple[list, list, list]:
-    """(run labels, union of stage keys, per-run flat dicts)."""
-    labels, flats = [], []
+def bench_trajectory(root: str = ".") -> tuple[list, list, list, list]:
+    """(run labels, union of stage keys, per-run flat dicts, raw docs)."""
+    labels, flats, docs = [], [], []
     for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
         try:
             doc = json.load(open(path))
@@ -79,12 +79,13 @@ def bench_trajectory(root: str = ".") -> tuple[list, list, list]:
         name = os.path.basename(path)[len("BENCH_"):-len(".json")]
         labels.append(name + (" (smoke)" if doc.get("smoke") else ""))
         flats.append(flatten_stages(doc))
+        docs.append(doc)
     keys: list = []
     for flat in flats:  # union, first-seen order
         for k in flat:
             if k not in keys:
                 keys.append(k)
-    return labels, keys, flats
+    return labels, keys, flats, docs
 
 
 def rollup_markdown(labels, keys, flats) -> str:
@@ -99,6 +100,36 @@ def rollup_markdown(labels, keys, flats) -> str:
             f"{flat[k]:.3f}" if k in flat else "n/a" for flat in flats
         ]
         lines.append(f"| {k} | " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
+def scheduler_markdown(labels, docs) -> str:
+    """Schema v7 rollup: per run, the cost model's resolved decision and
+    the delta-aware reuse-hit ratio of the zero-churn stream cell (reused
+    epochs / total epochs; warm runs reuse every epoch).  Runs predating
+    v7 show ``n/a`` — the sections were not measured."""
+    lines = [
+        "| run | sched mode | workers | reuse cold | reuse warm | "
+        "warm hit ratio |",
+        "|---|---|---|---|---|---|",
+    ]
+    for label, doc in zip(labels, docs):
+        decision = ((doc.get("scheduler") or {}).get("auto") or {}).get(
+            "decision"
+        ) or {}
+        reuse = (doc.get("stream") or {}).get("reuse") or {}
+        hits = reuse.get("trace_reuse") or {}
+        epochs = reuse.get("epochs")
+        ratio = (
+            f"{hits['warm'] / epochs:.2f}"
+            if isinstance(hits.get("warm"), int) and epochs
+            else "n/a"
+        )
+        lines.append(
+            f"| {label} | {decision.get('mode', 'n/a')} | "
+            f"{decision.get('workers', 'n/a')} | {hits.get('cold', 'n/a')} | "
+            f"{hits.get('warm', 'n/a')} | {ratio} |"
+        )
     return "\n".join(lines)
 
 
@@ -145,11 +176,15 @@ def main():
     sys.path.insert(0, "src")
 
     sections = []
-    labels, keys, flats = bench_trajectory()
+    labels, keys, flats, docs = bench_trajectory()
     if labels:
         sections.append(
             "# BENCH stage trajectory (seconds per run)\n\n"
             + rollup_markdown(labels, keys, flats)
+        )
+        sections.append(
+            "# Scheduler decisions and delta-aware reuse\n\n"
+            + scheduler_markdown(labels, docs)
         )
     else:
         sections.append("# BENCH stage trajectory\n\n(no BENCH_*.json found)")

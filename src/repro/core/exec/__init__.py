@@ -19,13 +19,17 @@ hooks, so the heavier modules (which import the driver back) resolve lazily
 through ``__getattr__`` to keep the import graph acyclic.
 """
 
-from repro.core.exec.timers import collect_stages, stage, time_s, time_us
+from repro.core.exec.timers import collect_stages, record, stage, time_s, time_us
 
 __all__ = [
     "ArtifactCache",
+    "MaterializePipeline",
+    "SchedDecision",
     "collect_stages",
     "default_cache_dir",
     "materialize_specs",
+    "plan_execution",
+    "record",
     "rows_equal",
     "run_grid",
     "stage",
@@ -39,7 +43,14 @@ def __getattr__(name):
         from repro.core.exec import artifacts
 
         return getattr(artifacts, name)
-    if name in ("materialize_specs", "run_grid", "rows_equal"):
+    if name in (
+        "MaterializePipeline",
+        "SchedDecision",
+        "materialize_specs",
+        "plan_execution",
+        "rows_equal",
+        "run_grid",
+    ):
         from repro.core.exec import scheduler
 
         return getattr(scheduler, name)

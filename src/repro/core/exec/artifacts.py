@@ -103,7 +103,25 @@ class ArtifactCache:
         at a different direction moves its artifacts instead of serving a
         stale traversal pattern.  Push kernels (every pre-registry
         kernel) keep byte-stable keys.
+
+        **Content-keyed specs.**  A spec exposing a ``content_key()``
+        method (the stream protocol's ``StreamEpochSpec``) is keyed on
+        what its trace is *determined by* — the per-epoch graph content
+        hash, root, and trace config — instead of on how it was declared.
+        Epochs whose graph the churn model left unchanged, and identical
+        epochs declared through different stream parameters, then share
+        one artifact: delta-aware trace reuse falls out of the cache key.
+        The schema and trace-code versions still wrap the content
+        document, so code changes move these keys like any other.
         """
+        content = getattr(spec, "content_key", None)
+        if callable(content):
+            doc = {
+                "artifact_schema": ARTIFACT_SCHEMA,
+                "trace_code_version": _driver.TRACE_CODE_VERSION,
+                "content": content(),
+            }
+            return json.dumps(doc, sort_keys=True)
         doc = {
             "artifact_schema": ARTIFACT_SCHEMA,
             "trace_code_version": _driver.TRACE_CODE_VERSION,
@@ -123,6 +141,13 @@ class ArtifactCache:
         if getattr(spec, "is_sharded", False):
             return self.manifest_path(spec)
         digest = hashlib.sha256(self.key(spec).encode()).hexdigest()[:20]
+        if callable(getattr(spec, "content_key", None)):
+            # Content-keyed: no epoch tag — epochs with identical graph
+            # content must resolve to the *same* file (that sharing is
+            # the reuse mechanism), and the digest alone distinguishes
+            # the rest.  ``g`` marks the digest as a graph-content hash.
+            name = f"{spec.kernel}_{spec.dataset}_s{spec.seed}_g{digest}.npz"
+            return self.root / name
         epoch = getattr(spec, "epoch", None)
         tag = f"_e{epoch}" if epoch is not None else ""
         name = f"{spec.kernel}_{spec.dataset}_s{spec.seed}{tag}_{digest}.npz"

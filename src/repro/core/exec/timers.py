@@ -13,7 +13,9 @@ Two layers:
   scorer wrap their phases in ``with stage("trace_gen"): ...``; a caller
   wanting the breakdown activates collection with ``with collect_stages()
   as times: ...``.  With no collector active ``stage`` is a no-op, so the
-  hot path pays nothing.
+  hot path pays nothing.  :func:`record` feeds the same collector with
+  durations (or counts) measured out-of-band — overlap windows and
+  scheduler decisions, which have no single ``with`` block to wrap.
 """
 
 from __future__ import annotations
@@ -59,6 +61,18 @@ def collect_stages(
         _ACTIVE = prev
 
 
+def record(name: str, value: float = 1.0) -> None:
+    """Accumulate ``value`` under ``name`` in the active collector.
+
+    The out-of-band counterpart of :func:`stage`: pipeline overlap is the
+    wall-time two futures spend concurrently in flight, and a scheduler
+    decision is a count — neither is a contiguous block a context manager
+    could wrap.  No-op without an active :func:`collect_stages`.
+    """
+    if _ACTIVE is not None:
+        _ACTIVE[name] = _ACTIVE.get(name, 0.0) + value
+
+
 @contextlib.contextmanager
 def stage(name: str) -> Iterator[None]:
     """Accumulate this block's duration under ``name`` (no-op when no
@@ -74,4 +88,4 @@ def stage(name: str) -> Iterator[None]:
             _ACTIVE[name] = _ACTIVE.get(name, 0.0) + (time.perf_counter() - t0)
 
 
-__all__ = ["collect_stages", "stage", "time_s", "time_us"]
+__all__ = ["collect_stages", "record", "stage", "time_s", "time_us"]

@@ -29,14 +29,15 @@ theirs.
 from __future__ import annotations
 
 import dataclasses
-from collections.abc import Mapping
+import json
+from collections.abc import Mapping, Sequence as _SequenceABC
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.driver import WorkloadSpec, WorkloadTrace
+from repro.core.driver import WorkloadSpec, WorkloadTrace, make_session
 from repro.core.exec.artifacts import ArtifactCache
-from repro.core.exec.timers import stage
+from repro.core.exec.timers import record, stage
 from repro.core.registry import Prefetcher, resolve_prefetchers
 from repro.memsim import (
     SCALED,
@@ -80,6 +81,19 @@ def score_prefetcher(
     return m
 
 
+def _retarget_trace(trace: WorkloadTrace, spec) -> WorkloadTrace:
+    """A content-identical trace re-bound to ``spec``.
+
+    Arrays are shared (they are bit-identical by construction of the
+    content key); the spec and its derived AMC session are fresh, exactly
+    as :func:`repro.core.exec.artifacts._unpack` rebinds a loaded
+    artifact — so scoring a reused trace equals scoring a re-emission.
+    """
+    return dataclasses.replace(
+        trace, spec=spec, session=make_session(spec, trace.cfg_trace)
+    )
+
+
 class WorkloadCache:
     """Build-once cache of :class:`WorkloadTrace` keyed by ``WorkloadSpec``.
 
@@ -91,27 +105,45 @@ class WorkloadCache:
     :class:`~repro.core.exec.artifacts.ArtifactCache`: misses consult the
     artifact store before building, and fresh builds are persisted there —
     so repeat sweeps and parallel runs skip rebuilds across processes.
+
+    Content-keyed specs (those exposing ``content_key()``, e.g. stream
+    epoch specs) additionally deduplicate *within* the in-memory store:
+    two distinct specs whose traces are determined by identical content —
+    epochs a churn model left unchanged, the same epoch reached through
+    different stream parameters — share one build, retargeted per spec
+    (``reuses`` counts these alias hits).
     """
 
     def __init__(self, artifacts: Optional[ArtifactCache] = None):
         self._store: Dict[WorkloadSpec, WorkloadTrace] = {}
+        self._by_content: Dict[str, WorkloadTrace] = {}
         self.artifacts = artifacts
         self.builds = 0
         self.hits = 0
         self.loads = 0  # artifact-cache (disk) hits
+        self.reuses = 0  # in-memory content-alias hits (distinct specs)
 
     def get_or_build(self, spec: WorkloadSpec) -> WorkloadTrace:
         if spec in self._store:
             self.hits += 1
             return self._store[spec]
+        content = getattr(spec, "content_key", None)
+        ck = (
+            json.dumps(content(), sort_keys=True) if callable(content) else None
+        )
         trace = self.artifacts.load(spec) if self.artifacts is not None else None
         if trace is not None:
             self.loads += 1
-        else:
+        elif ck is not None and ck in self._by_content:
+            trace = _retarget_trace(self._by_content[ck], spec)
+            self.reuses += 1
+        if trace is None:
             self.builds += 1
             trace = spec.build()
             if self.artifacts is not None:
                 self.artifacts.save(spec, trace)
+        if ck is not None:
+            self._by_content.setdefault(ck, trace)
         self._store[spec] = trace
         return trace
 
@@ -159,6 +191,27 @@ class _LazyWorkloads(Mapping):
         return len(self._specs)
 
 
+class _PipelinedTraces(_SequenceABC):
+    """Sequence view over a stream's epoch traces that blocks on each
+    epoch's *background build* on first access, then loads it through the
+    workload cache — the handoff between the spawn pool and the in-parent
+    lifecycle scorer.  Indexing epoch 0 does not wait for epochs 1..E, so
+    scoring overlaps the remaining builds."""
+
+    def __init__(self, pipeline, specs, cache: WorkloadCache):
+        self._pipeline = pipeline
+        self._specs = list(specs)
+        self._cache = cache
+
+    def __len__(self) -> int:
+        return len(self._specs)
+
+    def __getitem__(self, i: int) -> WorkloadTrace:
+        spec = self._specs[i]  # IndexError here ends Sequence iteration
+        self._pipeline.wait(spec)
+        return self._cache.get_or_build(spec)
+
+
 @dataclasses.dataclass(frozen=True)
 class CellResult:
     """One grid cell: a prefetcher scored on one workload.
@@ -195,6 +248,13 @@ class ExperimentResult:
     cells: List[CellResult]
     # A plain dict after a serial run; a lazy Mapping after a parallel run.
     workloads: Mapping[WorkloadSpec, WorkloadTrace]
+    # The cost model's scheduling decision (a SchedDecision dict) when the
+    # run resolved ``workers=None`` itself; None when the caller forced a
+    # worker count.
+    sched: Optional[dict] = None
+    # Epoch traces served from the content-addressed cache instead of
+    # being re-emitted (delta-aware reuse; counts stream epochs only).
+    trace_reuse: int = 0
 
     def select(self, **filters) -> List[CellResult]:
         """Cells matching all given kernel/dataset/prefetcher/seed filters."""
@@ -350,7 +410,10 @@ class Experiment:
         ]
 
     def run(
-        self, verbose: bool = False, workers: Optional[int] = None
+        self,
+        verbose: bool = False,
+        workers: Optional[int] = None,
+        pipeline: bool = True,
     ) -> ExperimentResult:
         """Build every workload (cached) and score every grid cell.
 
@@ -360,31 +423,49 @@ class Experiment:
         in the workload artifact cache.  Cell ordering and every metric
         are bit-identical to the serial path.  ``workers=1`` forces the
         serial reference implementation; the default (``workers=None``)
-        resolves to ``min(os.cpu_count(), n_tasks)`` — parallel only when
-        the host has spare cores AND the grid has independent builds to
-        spread, and never with unpicklable ad-hoc prefetchers (which
-        cannot cross the spawn boundary).
+        consults the scheduler's cost model
+        (:func:`repro.core.exec.scheduler.plan_execution`): task costs are
+        estimated from artifact-cache metadata (spec-derived on a cold
+        cache), and a pool is spawned only when its predicted time —
+        spawn overhead plus the load-balanced makespan — beats running
+        in-process.  On a single core, under memory pressure, or with
+        unpicklable ad-hoc prefetchers (which cannot cross the spawn
+        boundary) the run degrades to serial with no pool at all.  The
+        decision is surfaced as ``result.sched``.
+
+        ``pipeline`` selects the overlapped schedule (score tasks
+        dispatched as their builds complete) over the legacy phased
+        materialize-all-then-score-all schedule; both are bit-identical
+        to serial, the flag exists for the bench's A/B comparison.
 
         Stream workloads expand into per-epoch traces (built/cached like
         any workload — under ``workers=N`` the epochs of every stream are
-        materialized across the pool) and are then scored *in the parent*
-        by the stream protocol, whose cross-epoch table lifecycle is
-        inherently sequential; stream results are therefore byte-identical
-        between serial and parallel runs too.  Serving workloads follow
-        the same contract: per-tenant traces materialize across the pool,
-        the interleaved shared-LLC scoring runs in the parent.
+        materialized across the pool and handed to the scorer as each
+        build lands) and are scored *in the parent* by the stream
+        protocol, whose cross-epoch table lifecycle is inherently
+        sequential; stream results are therefore byte-identical between
+        serial and parallel runs too.  Serving workloads follow the same
+        contract: per-tenant traces materialize across the pool, the
+        interleaved shared-LLC scoring runs in the parent.  Epoch traces
+        are content-keyed, so epochs whose graph the churn model left
+        unchanged are *reused* rather than re-emitted
+        (``result.trace_reuse`` counts them).
         """
+        sched = None
         if workers is None:
-            workers = self._auto_workers()
+            sched = self._plan_schedule()
+            record(f"sched_decision[{sched.mode}]")
+            workers = sched.workers
         if workers > 1:
             if self.workload_specs:
-                result = self._run_parallel(workers, verbose)
+                result = self._run_parallel(workers, verbose, pipeline)
             else:  # stream/serve-only grid: no cells to shard, only builds
                 result = ExperimentResult(cells=[], workloads={})
             if self.stream_specs:
                 self._append_stream_cells(result, verbose, workers=workers)
             if self.serve_specs:
                 self._append_serve_cells(result, verbose, workers=workers)
+            result.sched = sched.as_dict() if sched is not None else None
             return result
         cells: List[CellResult] = []
         traces: Dict[WorkloadSpec, WorkloadTrace] = {}
@@ -442,73 +523,131 @@ class Experiment:
             self._append_stream_cells(result, verbose, workers=None)
         if self.serve_specs:
             self._append_serve_cells(result, verbose, workers=None)
+        result.sched = sched.as_dict() if sched is not None else None
         return result
 
-    def _auto_workers(self) -> int:
-        """Resolve ``workers=None``: one worker per independent build, up
-        to the core count — and strictly serial when parallelism cannot
-        help (single task, single core) or cannot work (unpicklable
-        ad-hoc prefetchers, which ``workers=N`` rejects loudly but a
-        *default* must tolerate)."""
+    def _plan_schedule(self):
+        """Resolve ``workers=None`` through the scheduler's cost model.
+
+        Every independent build in the run — plain workloads, stream
+        epochs, serve tenants — is costed against the artifact store;
+        :func:`repro.core.exec.scheduler.plan_execution` then picks
+        serial in-process execution or a pipelined pool sized from the
+        predicted makespan.  Unpicklable ad-hoc prefetchers force serial
+        (``workers=N`` rejects them loudly, but a *default* must
+        tolerate them)."""
         import os
         import pickle
 
-        n_tasks = len(self.workload_specs)
-        n_tasks += sum(len(s.epoch_specs()) for s in self.stream_specs)
-        n_tasks += len(
-            {w for s in self.serve_specs for w in s.tenant_workloads()}
-        )
-        n = min(os.cpu_count() or 1, n_tasks)
-        if n <= 1:
-            return 1
+        from repro.core.exec import scheduler  # lazy: avoids import cycle
+
         try:
             for _, gen in self.prefetchers:
                 pickle.dumps(gen)
         except Exception:
-            return 1
-        return n
+            return scheduler.SchedDecision(
+                mode="serial",
+                workers=1,
+                est_serial_s=0.0,
+                est_pool_s=None,
+                reason=(
+                    "unpicklable ad-hoc prefetchers cannot cross the "
+                    "spawn boundary"
+                ),
+                cores=os.cpu_count() or 1,
+                n_tasks=0,
+                measured_frac=0.0,
+            )
+        specs = list(self.workload_specs)
+        for s in self.stream_specs:
+            specs.extend(s.epoch_specs())
+        for s in self.serve_specs:
+            specs.extend(s.tenant_workloads())
+        artifacts = (
+            self.cache.artifacts
+            if self.cache.artifacts is not None
+            else ArtifactCache()
+        )
+        return scheduler.plan_execution(specs, len(self.prefetchers), artifacts)
+
+    def _auto_workers(self) -> int:
+        """The worker count ``workers=None`` resolves to (see
+        :meth:`_plan_schedule`); kept as the stable introspection point."""
+        return self._plan_schedule().workers
 
     def _append_stream_cells(
         self, result: ExperimentResult, verbose: bool, workers: Optional[int]
     ) -> None:
-        """Score every stream scenario and fold its per-epoch cells in."""
+        """Score every stream scenario and fold its per-epoch cells in.
+
+        Parallel runs hand epochs off as they materialize: the lifecycle
+        scorer starts on epoch 0 while later epochs are still building in
+        the pool (:class:`~repro.core.exec.scheduler.MaterializePipeline`
+        + :class:`_PipelinedTraces`), instead of waiting for all builds.
+        Either path counts delta-aware reuse — unique epoch specs whose
+        trace came from the content-addressed cache (or an in-memory
+        content alias) rather than a fresh emission — into
+        ``result.trace_reuse``; the count is identical serial vs pooled.
+        """
         from repro.stream import protocol  # lazy: the protocol imports us
 
         epoch_specs = {
             es: None for spec in self.stream_specs for es in spec.epoch_specs()
         }
+        builds_before = self.cache.builds
+        pipeline = None
         if workers is not None and workers > 1:
-            # Epochs are independent *builds*: materialize them across the
-            # pool, then walk the lifecycle sequentially in the parent.
+            # Epochs are independent *builds*: fan them across the pool,
+            # then walk the lifecycle sequentially in the parent, pulling
+            # each epoch as its build lands.
             from repro.core.exec import scheduler
 
             if self.cache.artifacts is None:
                 self.cache.artifacts = ArtifactCache()
-            scheduler.materialize_specs(
-                list(epoch_specs), workers=workers, artifacts=self.cache.artifacts
+            pipeline = scheduler.MaterializePipeline(
+                list(epoch_specs),
+                workers=workers,
+                artifacts=self.cache.artifacts,
             )
-        for spec in self.stream_specs:
-            traces = [self.cache.get_or_build(es) for es in spec.epoch_specs()]
-            for cell in protocol.score_stream(spec, self.prefetchers, traces):
-                result.cells.append(
-                    CellResult(
-                        kernel=spec.kernel,
-                        dataset=spec.dataset,
-                        prefetcher=cell.prefetcher,
-                        seed=spec.seed,
-                        metrics=cell.metrics,
-                        spec=cell.spec,
-                        epoch=cell.epoch,
-                        lifecycle=cell.lifecycle,
+        try:
+            for spec in self.stream_specs:
+                if pipeline is not None:
+                    traces: Sequence = _PipelinedTraces(
+                        pipeline, spec.epoch_specs(), self.cache
                     )
-                )
-                if verbose:
-                    m = cell.metrics
-                    print(
-                        f"[{spec.kernel}/{spec.dataset}@e{cell.epoch}] "
-                        f"{cell.prefetcher}: speedup {m.speedup:.2f} "
-                        f"coverage {m.coverage:.2f} accuracy {m.accuracy:.2f}"
+                else:
+                    traces = [
+                        self.cache.get_or_build(es) for es in spec.epoch_specs()
+                    ]
+                for cell in protocol.score_stream(spec, self.prefetchers, traces):
+                    result.cells.append(
+                        CellResult(
+                            kernel=spec.kernel,
+                            dataset=spec.dataset,
+                            prefetcher=cell.prefetcher,
+                            seed=spec.seed,
+                            metrics=cell.metrics,
+                            spec=cell.spec,
+                            epoch=cell.epoch,
+                            lifecycle=cell.lifecycle,
+                        )
                     )
+                    if verbose:
+                        m = cell.metrics
+                        print(
+                            f"[{spec.kernel}/{spec.dataset}@e{cell.epoch}] "
+                            f"{cell.prefetcher}: speedup {m.speedup:.2f} "
+                            f"coverage {m.coverage:.2f} accuracy {m.accuracy:.2f}"
+                        )
+        finally:
+            if pipeline is not None:
+                pipeline.close()
+        if pipeline is not None:
+            result.trace_reuse += pipeline.n_specs - pipeline.n_built
+        else:
+            result.trace_reuse += len(epoch_specs) - (
+                self.cache.builds - builds_before
+            )
         if isinstance(result.workloads, dict):
             for spec in self.stream_specs:
                 for es in spec.epoch_specs():
@@ -579,7 +718,9 @@ class Experiment:
                 + [ws for ws in tenant_specs if ws not in known],
             )
 
-    def _run_parallel(self, workers: int, verbose: bool) -> ExperimentResult:
+    def _run_parallel(
+        self, workers: int, verbose: bool, pipeline: bool = True
+    ) -> ExperimentResult:
         from repro.core.exec import scheduler  # lazy: avoids import cycle
 
         if self.cache.artifacts is None:
@@ -592,6 +733,7 @@ class Experiment:
             workers=workers,
             artifacts=self.cache.artifacts,
             verbose=verbose,
+            pipeline=pipeline,
         )
         # Later experiments sharing this cache reuse any parent-side builds.
         for spec, trace in prebuilt.items():

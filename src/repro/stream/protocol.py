@@ -36,6 +36,7 @@ in the parent, so ``workers=N`` results are byte-identical to serial.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import ClassVar, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -184,38 +185,104 @@ class StreamEpochSpec:
                 self, runs=[run], cfg_trace=cfg_trace, epoch_mode="single"
             )
 
+    def content_key(self) -> dict:
+        """Identity of the trace this spec *builds*, not how it was declared.
+
+        Everything the emitted trace is determined by: the epoch's graph
+        content (CSR arrays + presence mask, as a SHA-256), the shared
+        root, the stream-wide address layout, and the kernel/hierarchy/
+        element-size configuration.  The artifact cache keys content-keyed
+        specs on this document, so an epoch whose graph the churn model
+        left unchanged — or the same graph version reached through
+        different stream parameters — resolves to the *same* artifact and
+        is reused instead of re-emitted (delta-aware trace reuse).
+        """
+        ks = get_kernel(self.kernel)
+        seq = _sequence_for(
+            self.kernel, self.dataset, self.churn, self.epochs, self.seed
+        )
+        key = _seq_key(self.kernel, self.dataset, self.churn, self.epochs, self.seed)
+        return {
+            "kind": "stream-epoch",
+            "kernel": self.kernel,
+            "direction": ks.direction,
+            "hierarchy": dataclasses.asdict(self.hierarchy),
+            "elem_sizes": [self.target_elem_size, self.frontier_elem_size],
+            "layout": [int(seq.base.num_vertices), int(seq.max_edges)],
+            "root": _epoch_root(self.kernel, seq),
+            "graph_sha256": _epoch_fingerprint(key, seq, self.epoch),
+        }
+
 
 # Snapshot sequences are deterministic in (kernel's weightedness, dataset,
 # churn, epochs, seed); memoize per process so E epoch builds and the
 # scoring walk share one sequence.
 _SEQ_CACHE: Dict[tuple, SnapshotSequence] = {}
 
+# Per-epoch graph fingerprints, memoized alongside the sequence: hashing
+# the CSR arrays costs milliseconds but runs once per (sequence, epoch)
+# per process, not once per cache probe.
+_FP_CACHE: Dict[tuple, str] = {}
+
+
+def _seq_key(kernel: str, dataset: str, churn, epochs: int, seed: int) -> tuple:
+    return (dataset, get_kernel(kernel).weighted, churn, epochs, seed)
+
 
 def _sequence_for(
     kernel: str, dataset: str, churn, epochs: int, seed: int
 ) -> SnapshotSequence:
-    weighted = get_kernel(kernel).weighted
-    key = (dataset, weighted, churn, epochs, seed)
+    key = _seq_key(kernel, dataset, churn, epochs, seed)
     if key not in _SEQ_CACHE:
-        base = make_dataset(dataset, weighted=weighted)
+        base = make_dataset(dataset, weighted=get_kernel(kernel).weighted)
         _SEQ_CACHE[key] = snapshot_sequence(base, churn, epochs, seed=seed)
     return _SEQ_CACHE[key]
+
+
+def _epoch_fingerprint(seq_key: tuple, seq: SnapshotSequence, epoch: int) -> str:
+    """SHA-256 over epoch ``epoch``'s graph content: CSR offsets,
+    neighbors, weights (when present) and the vertex presence mask —
+    exactly the inputs the kernel run sees."""
+    key = (seq_key, epoch)
+    if key not in _FP_CACHE:
+        g = seq.graphs[epoch]
+        h = hashlib.sha256()
+        for arr in (g.offsets, g.neighbors, g.weights, seq.masks[epoch]):
+            if arr is None:
+                h.update(b"|none")
+                continue
+            a = np.ascontiguousarray(arr)
+            h.update(f"|{a.dtype}{a.shape}|".encode())
+            h.update(a.tobytes())
+        _FP_CACHE[key] = h.hexdigest()
+    return _FP_CACHE[key]
+
+
+def _epoch_root(kernel: str, seq: SnapshotSequence) -> Optional[int]:
+    """The stream's shared traversal root (None for rootless kernels).
+
+    The paper's BFS caveat, stretched to E epochs: one root, present in
+    every epoch, so the traversals stay correlated end to end.
+    """
+    ks = get_kernel(kernel)
+    if not ks.needs_root:
+        return None
+    from repro.apps.bfs import pick_root
+
+    always = np.logical_and.reduce(seq.masks)
+    return int(
+        pick_root(seq.graphs[0], always if always.any() else seq.masks[0])
+    )
 
 
 def _run_epoch(kernel: str, seq: SnapshotSequence, epoch: int):
     """One kernel run on snapshot ``epoch`` (shared root for traversals)."""
     ks = get_kernel(kernel)
-    g = seq.graphs[epoch]
-    mask = seq.masks[epoch]
-    root = None
-    if ks.needs_root:
-        from repro.apps.bfs import pick_root
-
-        # The paper's BFS caveat, stretched to E epochs: one root, present
-        # in every epoch, so the traversals stay correlated end to end.
-        always = np.logical_and.reduce(seq.masks)
-        root = pick_root(seq.graphs[0], always if always.any() else seq.masks[0])
-    return ks.run(g, present_mask=mask, root=root)
+    return ks.run(
+        seq.graphs[epoch],
+        present_mask=seq.masks[epoch],
+        root=_epoch_root(kernel, seq),
+    )
 
 
 # --------------------------------------------------------------- scoring

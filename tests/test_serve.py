@@ -300,17 +300,37 @@ def test_serve_parallel_matches_serial(serve_cache, duo_result):
 # ------------------------------------------------- auto-worker resolution
 
 
-def test_auto_workers_scales_with_tasks_and_cores(monkeypatch):
+def test_auto_workers_follows_cost_model(monkeypatch):
+    """``workers=None`` resolves through the scheduler's cost model: a
+    pool is spawned only when its predicted time beats serial."""
+    heavy = Experiment(
+        workloads=[
+            WorkloadSpec("pgd", "road-ca"),
+            WorkloadSpec("pgd", "google"),
+            WorkloadSpec("cc", "road-ca"),
+        ],
+        prefetchers=["amc"],
+    )
     monkeypatch.setattr("os.cpu_count", lambda: 8)
-    two = Experiment(
+    # Big cold builds: the makespan across workers beats serial + spawn.
+    d = heavy._plan_schedule()
+    assert d.mode == "pipeline" and 1 < d.workers <= 3
+    assert heavy._auto_workers() == d.workers
+    monkeypatch.setattr("os.cpu_count", lambda: 1)
+    # Single core (the bench-host case): never spawn a pool.
+    d1 = heavy._plan_schedule()
+    assert d1.mode == "serial" and d1.workers == 1
+    monkeypatch.setattr("os.cpu_count", lambda: 8)
+    small = Experiment(
         workloads=[WorkloadSpec("pgd", TINY), WorkloadSpec("cc", TINY)],
         prefetchers=["amc"],
     )
-    assert two._auto_workers() == 2  # min(cores, tasks)
+    # Tiny builds: spawn overhead exceeds the parallel gain -> serial,
+    # even with spare cores (the old blind min(cores, builds) said 2).
+    ds = small._plan_schedule()
+    assert ds.mode == "serial" and ds.workers == 1
     one = Experiment(workloads=[WorkloadSpec("pgd", TINY)], prefetchers=["amc"])
     assert one._auto_workers() == 1  # a single build gains nothing
-    monkeypatch.setattr("os.cpu_count", lambda: 1)
-    assert two._auto_workers() == 1  # no spare cores
 
 
 def test_auto_workers_serial_for_unpicklable_prefetchers(monkeypatch):
@@ -320,7 +340,8 @@ def test_auto_workers_serial_for_unpicklable_prefetchers(monkeypatch):
         prefetchers=[("adhoc", lambda w: None)],
     )
     # The default must tolerate what explicit workers=N rejects loudly.
-    assert exp._auto_workers() == 1
+    d = exp._plan_schedule()
+    assert d.workers == 1 and "spawn boundary" in d.reason
 
 
 def test_auto_workers_counts_serve_tenants(monkeypatch):
@@ -333,7 +354,8 @@ def test_auto_workers_counts_serve_tenants(monkeypatch):
         )
     )
     exp = Experiment(workloads=[spec], prefetchers=["amc"])
-    assert exp._auto_workers() == 3  # one per distinct tenant build
+    # One cost-model task per distinct tenant build.
+    assert exp._plan_schedule().n_tasks == 3
 
 
 # ----------------------------------------------------------- figures glue

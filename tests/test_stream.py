@@ -259,14 +259,29 @@ def test_stream_spec_validation():
         )
 
 
-def test_epoch_specs_are_distinct_cache_keys(arts):
+def test_epoch_specs_are_content_keyed(arts):
+    """Epoch artifacts are keyed on what the trace is *determined by* —
+    the per-epoch graph content — so churned epochs get distinct keys
+    while bit-identical epochs share one artifact (delta-aware reuse)."""
     spec = StreamSpec("pgd", TINY, SlidingWindow(), epochs=3)
     eps = spec.epoch_specs()
+    # a sliding window changes the graph every epoch: three distinct keys
     assert len({arts.path_for(e) for e in eps}) == 3
-    # churn kind and parameters move the key
-    other = dataclasses.replace(eps[0], churn=SlidingWindow(step_frac=0.2))
-    assert arts.path_for(other) != arts.path_for(eps[0])
-    assert "_e1_" in arts.path_for(eps[1]).name
+    # filenames carry the graph-content digest, not an epoch index tag
+    assert "_g" in arts.path_for(eps[1]).name
+    assert "_e1" not in arts.path_for(eps[1]).name
+    # zero churn leaves every epoch's graph bit-identical: ONE shared key
+    zc = UniformChurn(init_frac=1.0, del_frac=0.0, add_frac=0.0)
+    zeps = StreamSpec("pgd", TINY, zc, epochs=3).epoch_specs()
+    assert len({arts.path_for(e) for e in zeps}) == 1
+    # a different initial graph moves the key
+    other = StreamSpec(
+        "pgd",
+        TINY,
+        UniformChurn(init_frac=0.9, del_frac=0.0, add_frac=0.0),
+        epochs=3,
+    ).epoch_specs()
+    assert arts.path_for(other[0]) != arts.path_for(zeps[0])
     # lifecycle is NOT part of the epoch identity: persist/reset share builds
     a = StreamSpec("pgd", TINY, SlidingWindow(), epochs=3, lifecycle="persist")
     b = StreamSpec("pgd", TINY, SlidingWindow(), epochs=3, lifecycle="reset")
