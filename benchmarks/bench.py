@@ -47,6 +47,15 @@ reuse (content-keyed epochs: unchanged graphs are cache hits, counted by
 ``trace_reuse``) with a bit-identical reuse-vs-re-emission gate, plus the
 ``pipeline_overlap`` stage from the overlapped epoch handoff.
 
+Schema v8 adds the telemetry section (``docs/OBSERVABILITY.md``): the
+scheduler's auto warm run executes under a cross-process span tracer, and
+the committed document carries the run manifest (git sha, resolved
+engine/emitter, schema versions, SchedDecision), the merged metrics
+registry snapshot (cache hit/build counters, per-stage latency
+histograms), and the merged span-trace summary covering parent and
+worker processes.  ``tools/bench_diff.py`` gates CI on consecutive
+documents; ``tools/trace_export.py`` renders traces for Perfetto.
+
 The dated JSONs accumulate as the repo's machine-readable perf trajectory;
 CI runs ``--smoke`` (1 kernel x 1 dataset x 3 prefetchers) on every push,
 uploads the JSON as a build artifact, and fails this script (exit 1) when
@@ -78,7 +87,7 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 
 # Three prefetchers spanning the suite's families: the paper's contribution
 # (amc), a spatial baseline (vldp), and a replay baseline (rnr).  The
@@ -452,11 +461,23 @@ def main(argv=None) -> int:
         # cold A/B of the cost-aware schedule vs the legacy phased
         # workers=2 schedule on fresh artifact dirs.  The committed
         # SchedDecision documents *why* this host went serial or parallel.
+        # Schema v8: the auto warm run executes under a cross-process span
+        # tracer — workers append spans to per-pid JSONL files under the
+        # trace dir, the parent merges them, and the merged summary +
+        # metrics snapshot + run manifest are committed below.
+        from repro.core.obs import spans as obs
+
         sched_stages: dict = {}
-        with collect_stages(into=sched_stages):
-            auto_warm_s, auto_result = _grid_seconds(
-                specs, pairs, cache_dir, None
-            )
+        trace_dir = tempfile.mkdtemp(prefix="repro-bench-trace-")
+        try:
+            with obs.trace(dir=trace_dir) as tracer:
+                with collect_stages(into=sched_stages):
+                    auto_warm_s, auto_result = _grid_seconds(
+                        specs, pairs, cache_dir, None
+                    )
+            auto_run_trace = tracer.result
+        finally:
+            shutil.rmtree(trace_dir, ignore_errors=True)
         auto_parity = rows_equal(serial_rows, auto_result.rows())
         parity = parity and auto_parity
         warm1 = warm.get("1")
@@ -840,6 +861,17 @@ def main(argv=None) -> int:
                 "tolerance": SCHED_COLD_TOL,
             },
             "stages_s": dict(sorted(sched_stages.items())),
+        },
+        # Schema v8: structured run telemetry from the auto warm run —
+        # the run manifest (provenance), the merged metrics registry
+        # snapshot, and the merged parent+worker span-trace summary.
+        "telemetry": {
+            "manifest": (auto_result.telemetry or {}).get("manifest"),
+            "workload_cache": (auto_result.telemetry or {}).get(
+                "workload_cache"
+            ),
+            "metrics": auto_run_trace.metrics,
+            "trace": auto_run_trace.summary(),
         },
         # Schema v3: the streaming-subsystem cell (3-epoch sliding-window
         # stream) with the stream-protocol stage timers.

@@ -21,6 +21,10 @@ PF_ORDER = ["amc", "vldp", "bingo", "isb", "misb", "rnr", "ideal"]
 KNOWN_SCHEMAS = {
     "stream-drift": "load_streams/fig_drift",
     "serve-contention": "load_serves/fig_contention",
+    # Telemetry artifacts (docs/OBSERVABILITY.md): merged span traces and
+    # their Chrome trace-event exports (tools/trace_export.py).
+    "run-trace": "repro.core.obs.RunTrace/tools/trace_export.py",
+    "chrome-trace": "tools/trace_export.py (load in Perfetto)",
 }
 
 
@@ -210,6 +214,57 @@ def fig_contention(serves):
                     modes["per_tenant"]["mean_accuracy"]
                     - modes["shared"]["mean_accuracy"]
                 )
+    return headers, rows, derived
+
+
+def load_bench(root: str = "."):
+    """The BENCH_*.json perf trajectory, chronologically ordered.
+
+    Returns ``{"labels", "keys", "flats", "docs"}`` from
+    ``benchmarks.perf_report.bench_trajectory`` (empty dict with no BENCH
+    documents), ready for :func:`fig_stages`.
+    """
+    from benchmarks.perf_report import bench_trajectory
+
+    labels, keys, flats, docs = bench_trajectory(root)
+    if not labels:
+        return {}
+    return {"labels": labels, "keys": keys, "flats": flats, "docs": docs}
+
+
+def fig_stages(bench):
+    """Stage breakdown over the BENCH trajectory — where each run's time
+    went, per pipeline stage, with the newest run's telemetry-backed
+    cache counters as derived headline numbers (schema v8 documents carry
+    the merged metrics registry snapshot; older ones contribute ``n/a``).
+    """
+    labels, keys, flats = bench["labels"], bench["keys"], bench["flats"]
+    headers = ["stage"] + labels
+    rows = []
+    for k in keys:
+        rows.append(
+            [k] + [
+                round(flat[k], 3) if k in flat else "n/a" for flat in flats
+            ]
+        )
+    derived = {}
+    newest = flats[-1]
+    for k in sorted(newest, key=newest.get, reverse=True)[:5]:
+        derived[f"latest/{k}"] = newest[k]
+    oldest = flats[0]
+    shared = [k for k in keys if k in oldest and k in newest and oldest[k] > 0]
+    if shared:
+        top = max(shared, key=lambda k: oldest[k])
+        derived[f"trend/{top}"] = newest[top] / oldest[top]
+    counters = (
+        (bench["docs"][-1].get("telemetry") or {}).get("metrics") or {}
+    ).get("counters") or {}
+    hits = counters.get("artifact_cache.hits", 0.0) + counters.get(
+        "artifact.memo_hits", 0.0
+    )
+    misses = counters.get("artifact_cache.misses", 0.0)
+    if hits + misses > 0:
+        derived["latest_cache_hit_ratio"] = hits / (hits + misses)
     return headers, rows, derived
 
 

@@ -67,10 +67,27 @@ def flatten_stages(doc: dict) -> dict:
     return flat
 
 
+def bench_sort_key(path: str) -> tuple:
+    """Chronological sort key for ``BENCH_<date>[.N].json`` paths.
+
+    Lexicographic sorting breaks at the 10th run of a date —
+    ``BENCH_x.10.json`` sorts before ``BENCH_x.2.json`` — so the numeric
+    suffix is compared as an int.  The bare ``BENCH_<date>.json`` is run
+    1 of its date.  Names that don't parse sort last, lexicographically.
+    """
+    name = os.path.basename(path)[len("BENCH_") : -len(".json")]
+    date, _, suffix = name.partition(".")
+    try:
+        return (0, date, int(suffix) if suffix else 1, "")
+    except ValueError:
+        return (1, date, 0, suffix)
+
+
 def bench_trajectory(root: str = ".") -> tuple[list, list, list, list]:
     """(run labels, union of stage keys, per-run flat dicts, raw docs)."""
     labels, flats, docs = [], [], []
-    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")), key=bench_sort_key)
+    for path in paths:
         try:
             doc = json.load(open(path))
         except (OSError, json.JSONDecodeError) as e:

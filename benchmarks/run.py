@@ -104,6 +104,7 @@ def main() -> None:
     for name, loader, fn in [
         ("fig_drift", figures.load_streams, figures.fig_drift),
         ("fig_contention", figures.load_serves, figures.fig_contention),
+        ("fig_stages", figures.load_bench, figures.fig_stages),
     ]:
         docs = loader()
         if not docs:

@@ -21,6 +21,9 @@ Subpackages:
   exec         -- parallel execution engine: process-pool grid scheduler,
                   content-addressed workload artifact cache, stage timers
                   (``Experiment(...).run(workers=N)`` opts in)
+  obs          -- structured run telemetry: cross-process span tracing,
+                  the metrics registry, and run manifests (see
+                  docs/OBSERVABILITY.md)
 
 The PR-1 deprecation shims (``run_prefetcher_suite``,
 ``repro.core.prefetchers.SUITE``) have been removed per their stated
@@ -33,6 +36,7 @@ from repro.core.driver import (
     build_workload,
 )
 from repro.core.exec.artifacts import ArtifactCache
+from repro.core.obs import MetricsRegistry, RunTrace, Span, Tracer, trace
 from repro.core.experiment import (
     CellResult,
     Experiment,
@@ -50,6 +54,11 @@ from repro.core.registry import (
 
 __all__ = [
     "ArtifactCache",
+    "MetricsRegistry",
+    "RunTrace",
+    "Span",
+    "Tracer",
+    "trace",
     "WorkloadSpec",
     "WorkloadTrace",
     "build_workload",

@@ -34,6 +34,7 @@ from repro.apps.trace import T_ID, TraceConfig, trace_run
 from repro.core.amc.api import AMCSession
 from repro.core.amc.prefetcher import IterationView
 from repro.core.exec.timers import stage
+from repro.core.obs import spans as obs
 from repro.graphs import DATASETS, make_dataset, make_evolving_pair
 from repro.memsim import (
     SCALED,
@@ -103,7 +104,13 @@ class WorkloadSpec:
     def build(self, runs: Optional[List[AppRun]] = None) -> "WorkloadTrace":
         if runs is None:
             self.validate_names()
-        return _build_workload(self, runs)
+        with obs.span(
+            "build_workload",
+            kernel=self.kernel,
+            dataset=self.dataset,
+            seed=self.seed,
+        ):
+            return _build_workload(self, runs)
 
 
 @dataclasses.dataclass

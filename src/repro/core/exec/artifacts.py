@@ -257,33 +257,46 @@ class ArtifactCache:
 
     def load(self, spec: WorkloadSpec) -> Optional[WorkloadTrace]:
         """The cached trace for ``spec``, or None (unreadable == miss)."""
+        from repro.core.obs import spans as obs
+
         path = self.path_for(spec)
-        try:
-            with np.load(path, allow_pickle=False) as z:
-                trace = _unpack(spec, z)
-        except Exception:
-            self.misses += 1
-            return None
-        self.loads += 1
-        return trace
+        with obs.span("artifact_load", cache_key=path.name) as sp:
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    trace = _unpack(spec, z)
+            except Exception:
+                self.misses += 1
+                obs.inc("artifact_cache.misses")
+                if sp:
+                    sp.attrs["hit"] = False
+                return None
+            self.loads += 1
+            obs.inc("artifact_cache.hits")
+            if sp:
+                sp.attrs["hit"] = True
+            return trace
 
     def save(self, spec: WorkloadSpec, trace: WorkloadTrace) -> Path:
         """Persist ``trace`` atomically; returns the artifact path."""
+        from repro.core.obs import spans as obs
+
         path = self.path_for(spec)
         self.root.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "wb") as f:
-                np.savez_compressed(f, **_pack(trace))
-            os.replace(tmp, path)
-        except BaseException:
+        with obs.span("artifact_save", cache_key=path.name):
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
-        self.saves += 1
-        return path
+                with os.fdopen(fd, "wb") as f:
+                    np.savez_compressed(f, **_pack(trace))
+                os.replace(tmp, path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            self.saves += 1
+            obs.inc("artifact_cache.saves")
+            return path
 
 
 def _pack(trace: WorkloadTrace) -> dict:

@@ -45,6 +45,7 @@ from repro.core.driver import WorkloadSpec, WorkloadTrace
 from repro.core.exec.artifacts import ArtifactCache
 from repro.core.exec.timers import record
 from repro.core.experiment import score_prefetcher
+from repro.core.obs import spans as obs
 from repro.memsim import PrefetchMetrics
 
 
@@ -64,15 +65,30 @@ def _materialize(spec: WorkloadSpec, cache_root: str) -> Optional[WorkloadTrace]
         sharded.ensure_shards(spec, ArtifactCache(cache_root))
         return None
     key = (cache_root, spec)
-    if _LAST_TRACE is not None and _LAST_TRACE[0] == key:
-        return _LAST_TRACE[1]
-    cache = ArtifactCache(cache_root)
-    trace = cache.load(spec)
-    if trace is None:
-        trace = spec.build()
-        cache.save(spec, trace)
-    _LAST_TRACE = (key, trace)
-    return trace
+    with obs.span(
+        "materialize", kernel=spec.kernel, dataset=spec.dataset
+    ) as sp:
+        if _LAST_TRACE is not None and _LAST_TRACE[0] == key:
+            if sp:
+                sp.attrs["cache"] = "memo"
+            obs.inc("artifact.memo_hits")
+            return _LAST_TRACE[1]
+        cache = ArtifactCache(cache_root)
+        if sp:
+            sp.attrs["cache_key"] = cache.path_for(spec).name
+        trace = cache.load(spec)
+        if trace is None:
+            trace = spec.build()
+            cache.save(spec, trace)
+            if sp:
+                sp.attrs["cache"] = "build"
+            obs.inc("artifact.builds")
+        else:
+            if sp:
+                sp.attrs["cache"] = "load"
+            obs.inc("artifact.loads")
+        _LAST_TRACE = (key, trace)
+        return trace
 
 
 def _run_task(task) -> Tuple[int, List[Tuple[str, PrefetchMetrics]]]:
@@ -81,41 +97,56 @@ def _run_task(task) -> Tuple[int, List[Tuple[str, PrefetchMetrics]]]:
 
     index, spec, prefetchers, cache_root = task
     debug = os.environ.get("REPRO_EXEC_DEBUG")
-    if getattr(spec, "is_sharded", False):
-        # Sharded tasks stream shards through the bounded-memory scorer;
-        # the shard store (cached by content key) is built on first touch.
-        from repro.core.exec import sharded
+    try:
+        with obs.span(
+            "run_task",
+            task=index,
+            kernel=spec.kernel,
+            dataset=spec.dataset,
+            prefetchers=[name for name, _ in prefetchers],
+            sharded=bool(getattr(spec, "is_sharded", False)),
+        ):
+            if getattr(spec, "is_sharded", False):
+                # Sharded tasks stream shards through the bounded-memory
+                # scorer; the shard store (cached by content key) is built
+                # on first touch.
+                from repro.core.exec import sharded
 
-        t0 = time.perf_counter()
-        scored = sharded.score_sharded(
-            spec, list(prefetchers), ArtifactCache(cache_root)
-        )
-        if debug:
-            print(
-                f"[worker {os.getpid()}] {spec.kernel}/{spec.dataset} "
-                f"sharded x{len(prefetchers)} {time.perf_counter() - t0:.1f}s",
-                flush=True,
-            )
-        return index, scored
-    t0 = time.perf_counter()
-    trace = _materialize(spec, cache_root)
-    if debug:
-        print(
-            f"[worker {os.getpid()}] {spec.kernel}/{spec.dataset} "
-            f"materialize {time.perf_counter() - t0:.1f}s",
-            flush=True,
-        )
-    scored = []
-    for name, gen in prefetchers:
-        t0 = time.perf_counter()
-        scored.append((name, score_prefetcher(trace, name, gen)))
-        if debug:
-            print(
-                f"[worker {os.getpid()}] {spec.kernel}/{spec.dataset} "
-                f"score {name} {time.perf_counter() - t0:.1f}s",
-                flush=True,
-            )
-    return index, scored
+                t0 = time.perf_counter()
+                scored = sharded.score_sharded(
+                    spec, list(prefetchers), ArtifactCache(cache_root)
+                )
+                if debug:
+                    print(
+                        f"[worker {os.getpid()}] {spec.kernel}/{spec.dataset} "
+                        f"sharded x{len(prefetchers)} "
+                        f"{time.perf_counter() - t0:.1f}s",
+                        flush=True,
+                    )
+                return index, scored
+            t0 = time.perf_counter()
+            trace = _materialize(spec, cache_root)
+            if debug:
+                print(
+                    f"[worker {os.getpid()}] {spec.kernel}/{spec.dataset} "
+                    f"materialize {time.perf_counter() - t0:.1f}s",
+                    flush=True,
+                )
+            scored = []
+            for name, gen in prefetchers:
+                t0 = time.perf_counter()
+                scored.append((name, score_prefetcher(trace, name, gen)))
+                if debug:
+                    print(
+                        f"[worker {os.getpid()}] {spec.kernel}/{spec.dataset} "
+                        f"score {name} {time.perf_counter() - t0:.1f}s",
+                        flush=True,
+                    )
+            return index, scored
+    finally:
+        # Task boundary: land this process's cumulative counters so the
+        # parent's merge sees worker-side cache hit/build splits.
+        obs.flush_worker_metrics()
 
 
 def _split(items: Sequence, n: int) -> List[list]:
@@ -506,6 +537,13 @@ def _spawn_pool(
         # use_emitter overrides live in parent process-local state).
         EMITTER_ENV: current_emitter(),
     }
+    # When a dir-backed tracer is active, children join the trace: they
+    # append spans to their own spans-worker-<pid>.jsonl under the trace
+    # dir, and the parent's Tracer.finish() merges every file.
+    tracer = obs.current_tracer()
+    if tracer is not None and tracer.dir is not None:
+        child_env[obs.SPAN_DIR_ENV] = str(tracer.dir)
+        child_env[obs.TRACE_ID_ENV] = tracer.trace_id
     saved_env = {k: os.environ.get(k) for k in child_env}
     os.environ.update(child_env)
     try:
@@ -695,7 +733,10 @@ def _run_grid_pipelined(
 def _materialize_task(task) -> int:
     """Worker body: build-or-load one trace into the artifact store."""
     index, spec, cache_root = task
-    _materialize(spec, cache_root)
+    try:
+        _materialize(spec, cache_root)
+    finally:
+        obs.flush_worker_metrics()
     return index
 
 
@@ -763,9 +804,15 @@ class MaterializePipeline:
             # Parent-side work since the last handoff ran concurrently
             # with at least one build — the pipeline's saving.
             record("pipeline_overlap", now - self._last_handoff)
-        fut = self._futures.get(str(self.artifacts.path_for(spec)))
-        if fut is not None:
-            fut.result()
+        path = self.artifacts.path_for(spec)
+        fut = self._futures.get(str(path))
+        with obs.span(
+            "pipeline_handoff",
+            cache_key=path.name,
+            built=fut is not None,
+        ):
+            if fut is not None:
+                fut.result()
         self._last_handoff = time.perf_counter()
 
     def close(self) -> None:

@@ -52,6 +52,7 @@ from repro.core.amc.prefetcher import IterationView
 from repro.core.driver import WorkloadSpec, _run_app
 from repro.core.exec.artifacts import ArtifactCache
 from repro.core.exec.timers import stage
+from repro.core.obs import spans as obs
 from repro.memsim.config import BLOCK_BITS, HierarchyConfig
 from repro.memsim.hierarchy import demand_init_state, simulate_demand
 from repro.memsim.metrics import PrefetchMetrics
@@ -190,7 +191,12 @@ def ensure_shards(spec: ShardedSpec, cache: ArtifactCache) -> dict:
             return manifest
     spec.validate_names()
     ks = kernel_traits(spec.kernel)
-    with stage("trace_gen"):
+    with obs.span(
+        "ensure_shards",
+        kernel=spec.kernel,
+        dataset=spec.dataset,
+        shard_accesses=spec.shard_accesses,
+    ), stage("trace_gen"):
         runs = _run_app(spec.kernel, spec.dataset, spec.seed)
         g = runs[0].graph
         cfg_trace = TraceConfig(
@@ -349,9 +355,11 @@ def score_sharded(
         for k, arrays in enumerate(iter_shard_arrays(spec, cache, manifest)):
             blocks = arrays["block"]
             iters = arrays["iter_id"]
-            profile, dstate = simulate_demand(
-                blocks, iters, cfg, state=dstate, return_state=True
-            )
+            with obs.span("shard_demand", shard=k, accesses=len(blocks)):
+                profile, dstate = simulate_demand(
+                    blocks, iters, cfg, state=dstate, return_state=True
+                )
+            obs.inc("sharded.shards_swept")
             d_pos = profile.l2_pos  # global positions (carry offsets them)
             d_blocks = profile.l2_blocks
             d_iter = profile.l2_iter.astype(np.int64)
@@ -408,6 +416,7 @@ def score_sharded(
 
         # ---- phase 2: replay the L2 substream once per prefetcher
         for pf_idx, (name, gen) in enumerate(prefetchers):
+            obs.inc("sharded.replays")
             x_pos = x_blocks = None
             meta_bytes = 0
             info: dict = {}

@@ -16,15 +16,22 @@ Two layers:
   hot path pays nothing.  :func:`record` feeds the same collector with
   durations (or counts) measured out-of-band — overlap windows and
   scheduler decisions, which have no single ``with`` block to wrap.
+
+``stage``/``collect_stages``/``record`` are now thin re-exports of
+:mod:`repro.core.obs.spans`: the same stage names double as structured
+spans (and per-stage latency histograms) when a tracer or metrics
+registry is active, with the flat stage-dict semantics — including the
+no-op fast path — unchanged.  See docs/OBSERVABILITY.md.
 """
 
 from __future__ import annotations
 
-import contextlib
 import time
-from typing import Callable, Dict, Iterator, Optional
+from typing import Callable
 
-_ACTIVE: Optional[Dict[str, float]] = None
+from repro.core.obs.spans import collect_stages, record, stage
+
+__all__ = ["collect_stages", "record", "stage", "time_s", "time_us"]
 
 
 def time_s(fn: Callable[[], object], repeats: int = 1, warmup: int = 0) -> float:
@@ -40,52 +47,3 @@ def time_s(fn: Callable[[], object], repeats: int = 1, warmup: int = 0) -> float
 def time_us(fn: Callable[[], object], repeats: int = 3) -> float:
     """Mean microseconds per call, after one warmup (compile) call."""
     return time_s(fn, repeats=repeats, warmup=1) * 1e6
-
-
-@contextlib.contextmanager
-def collect_stages(
-    into: Optional[Dict[str, float]] = None,
-) -> Iterator[Dict[str, float]]:
-    """Collect ``stage()`` durations from the enclosed block into a dict.
-
-    Durations accumulate per stage name, so a block that builds several
-    workloads reports total seconds spent in each pipeline stage.  Nested
-    collectors shadow outer ones for their extent.
-    """
-    global _ACTIVE
-    times = into if into is not None else {}
-    prev, _ACTIVE = _ACTIVE, times
-    try:
-        yield times
-    finally:
-        _ACTIVE = prev
-
-
-def record(name: str, value: float = 1.0) -> None:
-    """Accumulate ``value`` under ``name`` in the active collector.
-
-    The out-of-band counterpart of :func:`stage`: pipeline overlap is the
-    wall-time two futures spend concurrently in flight, and a scheduler
-    decision is a count — neither is a contiguous block a context manager
-    could wrap.  No-op without an active :func:`collect_stages`.
-    """
-    if _ACTIVE is not None:
-        _ACTIVE[name] = _ACTIVE.get(name, 0.0) + value
-
-
-@contextlib.contextmanager
-def stage(name: str) -> Iterator[None]:
-    """Accumulate this block's duration under ``name`` (no-op when no
-    :func:`collect_stages` collector is active)."""
-    if _ACTIVE is None:
-        yield
-        return
-    t0 = time.perf_counter()
-    try:
-        yield
-    finally:
-        if _ACTIVE is not None:
-            _ACTIVE[name] = _ACTIVE.get(name, 0.0) + (time.perf_counter() - t0)
-
-
-__all__ = ["collect_stages", "record", "stage", "time_s", "time_us"]

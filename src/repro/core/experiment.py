@@ -38,6 +38,7 @@ import numpy as np
 from repro.core.driver import WorkloadSpec, WorkloadTrace, make_session
 from repro.core.exec.artifacts import ArtifactCache
 from repro.core.exec.timers import record, stage
+from repro.core.obs import spans as obs
 from repro.core.registry import Prefetcher, resolve_prefetchers
 from repro.memsim import (
     SCALED,
@@ -52,7 +53,12 @@ def score_prefetcher(
     workload: WorkloadTrace, name: str, generate: Prefetcher
 ) -> PrefetchMetrics:
     """Score one prefetcher in the composite (next-line + X) configuration."""
-    with stage("score"):
+    with obs.span(
+        "score_cell",
+        prefetcher=name,
+        kernel=workload.spec.kernel,
+        dataset=workload.spec.dataset,
+    ), stage("score"):
         stream = generate(workload)
         blocks = np.concatenate([workload.nl_blocks, stream.blocks])
         pos = np.concatenate([workload.nl_pos, stream.pos])
@@ -126,26 +132,41 @@ class WorkloadCache:
     def get_or_build(self, spec: WorkloadSpec) -> WorkloadTrace:
         if spec in self._store:
             self.hits += 1
+            obs.inc("workload_cache.hits")
             return self._store[spec]
         content = getattr(spec, "content_key", None)
         ck = (
             json.dumps(content(), sort_keys=True) if callable(content) else None
         )
-        trace = self.artifacts.load(spec) if self.artifacts is not None else None
-        if trace is not None:
-            self.loads += 1
-        elif ck is not None and ck in self._by_content:
-            trace = _retarget_trace(self._by_content[ck], spec)
-            self.reuses += 1
-        if trace is None:
-            self.builds += 1
-            trace = spec.build()
-            if self.artifacts is not None:
-                self.artifacts.save(spec, trace)
-        if ck is not None:
-            self._by_content.setdefault(ck, trace)
-        self._store[spec] = trace
-        return trace
+        with obs.span(
+            "get_or_build", kernel=spec.kernel, dataset=spec.dataset
+        ) as sp:
+            trace = (
+                self.artifacts.load(spec) if self.artifacts is not None else None
+            )
+            if trace is not None:
+                self.loads += 1
+                obs.inc("workload_cache.loads")
+                if sp:
+                    sp.attrs["cache"] = "load"
+            elif ck is not None and ck in self._by_content:
+                trace = _retarget_trace(self._by_content[ck], spec)
+                self.reuses += 1
+                obs.inc("workload_cache.reuses")
+                if sp:
+                    sp.attrs["cache"] = "reuse"
+            if trace is None:
+                self.builds += 1
+                obs.inc("workload_cache.builds")
+                if sp:
+                    sp.attrs["cache"] = "build"
+                trace = spec.build()
+                if self.artifacts is not None:
+                    self.artifacts.save(spec, trace)
+            if ck is not None:
+                self._by_content.setdefault(ck, trace)
+            self._store[spec] = trace
+            return trace
 
     def evict(self, spec: WorkloadSpec) -> None:
         """Drop the in-memory entry (the artifact, if any, stays on disk).
@@ -255,6 +276,11 @@ class ExperimentResult:
     # Epoch traces served from the content-addressed cache instead of
     # being re-emitted (delta-aware reuse; counts stream epochs only).
     trace_reuse: int = 0
+    # Run telemetry (see docs/OBSERVABILITY.md): the run manifest (git
+    # sha, resolved engine/emitter, schema versions, SchedDecision),
+    # workload-cache counters, and — when a tracer was active — the trace
+    # id tying this result to its merged RunTrace.
+    telemetry: Optional[dict] = None
 
     def select(self, **filters) -> List[CellResult]:
         """Cells matching all given kernel/dataset/prefetcher/seed filters."""
@@ -451,6 +477,20 @@ class Experiment:
         unchanged are *reused* rather than re-emitted
         (``result.trace_reuse`` counts them).
         """
+        with obs.span(
+            "experiment_run",
+            workloads=len(self.workload_specs),
+            streams=len(self.stream_specs),
+            serves=len(self.serve_specs),
+            prefetchers=self.prefetcher_names,
+        ):
+            result = self._run_impl(verbose, workers, pipeline)
+        result.telemetry = self._telemetry(result.sched)
+        return result
+
+    def _run_impl(
+        self, verbose: bool, workers: Optional[int], pipeline: bool
+    ) -> ExperimentResult:
         sched = None
         if workers is None:
             sched = self._plan_schedule()
@@ -525,6 +565,24 @@ class Experiment:
             self._append_serve_cells(result, verbose, workers=None)
         result.sched = sched.as_dict() if sched is not None else None
         return result
+
+    def _telemetry(self, sched: Optional[dict]) -> dict:
+        """Provenance + counters block for ``ExperimentResult.telemetry``."""
+        from repro.core.obs.manifest import run_manifest
+
+        doc = {
+            "manifest": run_manifest(sched=sched),
+            "workload_cache": {
+                "hits": self.cache.hits,
+                "builds": self.cache.builds,
+                "loads": self.cache.loads,
+                "reuses": self.cache.reuses,
+            },
+        }
+        tracer = obs.current_tracer()
+        if tracer is not None:
+            doc["trace_id"] = tracer.trace_id
+        return doc
 
     def _plan_schedule(self):
         """Resolve ``workers=None`` through the scheduler's cost model.

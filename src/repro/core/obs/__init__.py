@@ -1,0 +1,59 @@
+"""Structured run telemetry: spans, metrics, and run manifests.
+
+See docs/OBSERVABILITY.md for the span model and attribute conventions.
+"""
+
+from repro.core.obs.manifest import git_sha, run_manifest
+from repro.core.obs.metrics import (
+    MetricsRegistry,
+    histogram_quantile,
+    merge_snapshots,
+)
+from repro.core.obs.spans import (
+    SPAN_DIR_ENV,
+    TRACE_ID_ENV,
+    TRACE_SCHEMA,
+    RunTrace,
+    Span,
+    Tracer,
+    collect_stages,
+    current_metrics,
+    current_tracer,
+    flush_worker_metrics,
+    inc,
+    metrics_registry,
+    observe,
+    record,
+    set_gauge,
+    span,
+    stage,
+    trace,
+    tracing,
+)
+
+__all__ = [
+    "MetricsRegistry",
+    "RunTrace",
+    "SPAN_DIR_ENV",
+    "Span",
+    "TRACE_ID_ENV",
+    "TRACE_SCHEMA",
+    "Tracer",
+    "collect_stages",
+    "current_metrics",
+    "current_tracer",
+    "flush_worker_metrics",
+    "git_sha",
+    "histogram_quantile",
+    "inc",
+    "merge_snapshots",
+    "metrics_registry",
+    "observe",
+    "record",
+    "run_manifest",
+    "set_gauge",
+    "span",
+    "stage",
+    "trace",
+    "tracing",
+]

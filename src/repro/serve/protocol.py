@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.driver import WorkloadSpec, WorkloadTrace
 from repro.core.exec.timers import stage
+from repro.core.obs import spans as obs
 from repro.memsim import (
     SCALED,
     HierarchyConfig,
@@ -250,7 +251,12 @@ def score_serve(
             spec.table_modes if _is_amc_generator(gen) else (None,)
         )
         for mode in modes:
-            with stage("serve_score"):
+            with obs.span(
+                "serve_cell",
+                prefetcher=name,
+                table_mode=mode,
+                tenants=len(traces),
+            ), stage("serve_score"):
                 table_counters = None
                 if mode == "shared":
                     streams, table_counters = shared_table_streams(
@@ -281,6 +287,8 @@ def score_serve(
                             "llc_demand_hits_lost"
                         ],
                     )
+                    for key, v in lost[k].items():
+                        obs.inc(f"serve.{key}", float(v))
                     if table_counters is not None:
                         serve_info["shared_table"] = dict(
                             {

@@ -49,6 +49,7 @@ from repro.core.driver import (
     make_session,
 )
 from repro.core.exec.timers import stage
+from repro.core.obs import spans as obs
 from repro.graphs import DATASETS, make_dataset
 from repro.memsim import SCALED, HierarchyConfig, PrefetchMetrics
 from repro.memsim.metrics import summarize_epochs
@@ -173,7 +174,13 @@ class StreamEpochSpec:
         """Run the kernel on snapshot ``epoch`` and trace it in the
         stream's shared address layout (timed as ``trace_epoch``)."""
         self.validate_names()
-        with stage("trace_epoch"):
+        with obs.span(
+            "build_epoch",
+            kernel=self.kernel,
+            dataset=self.dataset,
+            epoch=self.epoch,
+            churn=self.churn,
+        ), stage("trace_epoch"):
             seq = _sequence_for(
                 self.kernel, self.dataset, self.churn, self.epochs, self.seed
             )
@@ -335,17 +342,26 @@ def score_stream(
                 session=make_session(spec, traces[0].cfg_trace),
             )
             for e, trace in enumerate(traces):
-                storage = lc.begin_epoch(e)
+                with obs.span(
+                    "stream_epoch",
+                    epoch=e,
+                    prefetcher=name,
+                    lifecycle=spec.lifecycle,
+                    churn=spec.churn,
+                ):
+                    storage = lc.begin_epoch(e)
 
-                def with_carry(workload, _gen=gen, _storage=storage):
-                    return _gen(workload, storage=_storage)
+                    def with_carry(workload, _gen=gen, _storage=storage):
+                        return _gen(workload, storage=_storage)
 
-                m = score_prefetcher(trace, name, with_carry)
-                changed = (
-                    seq.changed_vertices(e + 1) if e + 1 < spec.epochs else None
-                )
-                report = lc.end_epoch(e, changed_vids=changed)
-                m.info.update(lifecycle=spec.lifecycle, table=report.row())
+                    m = score_prefetcher(trace, name, with_carry)
+                    changed = (
+                        seq.changed_vertices(e + 1)
+                        if e + 1 < spec.epochs
+                        else None
+                    )
+                    report = lc.end_epoch(e, changed_vids=changed)
+                    m.info.update(lifecycle=spec.lifecycle, table=report.row())
                 cells.append(
                     EpochCell(
                         epoch=e,
@@ -357,7 +373,10 @@ def score_stream(
                 )
         else:
             for e, trace in enumerate(traces):
-                m = score_prefetcher(trace, name, gen)
+                with obs.span(
+                    "stream_epoch", epoch=e, prefetcher=name, churn=spec.churn
+                ):
+                    m = score_prefetcher(trace, name, gen)
                 cells.append(
                     EpochCell(
                         epoch=e,

@@ -1,0 +1,176 @@
+"""Diff the two most recent BENCH documents and gate on regressions.
+
+    PYTHONPATH=src python tools/bench_diff.py [--threshold 1.5] \
+        [--min-seconds 0.05] [--out results/bench_diff.json] [old new]
+
+With no explicit paths, picks the two most recent *comparable*
+``BENCH_*.json`` at the repo root — chronological order (the
+``benchmarks.perf_report.bench_sort_key`` ordering, not lexicographic),
+and comparable meaning the same ``smoke`` flag and the same grid, so a
+CI smoke run never diffs against a committed full run.  Every stage/cell
+key from ``benchmarks.perf_report.flatten_stages`` is compared; a
+*regression* is a stage that is both ``threshold``x slower than the
+baseline and at least ``min-seconds`` absolutely slower (the floor keeps
+sub-millisecond noise cells from tripping a ratio gate).
+
+Exit status: 0 clean or no comparable baseline (a note is printed — the
+first run of a new configuration has nothing to diff against), 1 on any
+regression.  ``--out`` writes the full diff as JSON for CI artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def comparable(a: dict, b: dict) -> bool:
+    """Same benchmark configuration: smoke flag and grid shape."""
+    return bool(a.get("smoke")) == bool(b.get("smoke")) and a.get("grid") == b.get(
+        "grid"
+    )
+
+
+def diff_stages(
+    old: dict,
+    new: dict,
+    threshold: float,
+    min_seconds: float,
+) -> dict:
+    """Per-stage comparison of two BENCH documents.
+
+    Returns ``{"rows": [...], "regressions": [...]}`` where each row has
+    the stage key, both timings, and the ratio; regressions are the rows
+    breaching both the ratio threshold and the absolute floor.
+    """
+    from benchmarks.perf_report import flatten_stages
+
+    f_old, f_new = flatten_stages(old), flatten_stages(new)
+    rows, regressions = [], []
+    for key in sorted(set(f_old) | set(f_new)):
+        o, n = f_old.get(key), f_new.get(key)
+        row = {"stage": key, "old_s": o, "new_s": n}
+        if o is not None and n is not None and o > 0:
+            row["ratio"] = n / o
+            if n / o > threshold and (n - o) > min_seconds:
+                row["regression"] = True
+                regressions.append(row)
+        rows.append(row)
+    return {"rows": rows, "regressions": regressions}
+
+
+def pick_latest_pair(root: str):
+    """The two most recent mutually-comparable BENCH docs, oldest first.
+
+    The newest document anchors the diff; the baseline is the most
+    recent older document with the same configuration.  Returns
+    ``(old_path, old_doc, new_path, new_doc)`` or None.
+    """
+    from benchmarks.perf_report import bench_sort_key
+
+    paths = sorted(
+        glob.glob(os.path.join(root, "BENCH_*.json")), key=bench_sort_key
+    )
+    docs = []
+    for p in paths:
+        try:
+            with open(p) as f:
+                docs.append((p, json.load(f)))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[bench_diff] skipping unreadable {p}: {e}", file=sys.stderr)
+    if len(docs) < 2:
+        return None
+    new_path, new_doc = docs[-1]
+    for old_path, old_doc in reversed(docs[:-1]):
+        if comparable(old_doc, new_doc):
+            return old_path, old_doc, new_path, new_doc
+    return None
+
+
+def main(argv=None) -> int:
+    sys.path.insert(0, "src")
+    sys.path.insert(0, ".")
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", help="explicit [old new] BENCH paths")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.5,
+        help="regression ratio gate: new/old above this fails (default 1.5)",
+    )
+    ap.add_argument(
+        "--min-seconds",
+        type=float,
+        default=0.05,
+        help="absolute slowdown floor below which a ratio breach is noise",
+    )
+    ap.add_argument("--out", default=None, help="write the diff JSON here")
+    ap.add_argument("--root", default=".", help="directory of BENCH_*.json")
+    args = ap.parse_args(argv)
+
+    if args.paths:
+        if len(args.paths) != 2:
+            ap.error("give exactly two explicit paths: old new")
+        old_path, new_path = args.paths
+        with open(old_path) as f:
+            old_doc = json.load(f)
+        with open(new_path) as f:
+            new_doc = json.load(f)
+        if not comparable(old_doc, new_doc):
+            print(
+                f"[bench_diff] warning: {old_path} and {new_path} differ in "
+                "smoke flag or grid; ratios may not be meaningful",
+                file=sys.stderr,
+            )
+    else:
+        pair = pick_latest_pair(args.root)
+        if pair is None:
+            print(
+                "[bench_diff] no comparable BENCH pair found (need two "
+                "documents with the same smoke flag and grid) — nothing to "
+                "diff, passing"
+            )
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump({"comparable": False, "rows": []}, f, indent=1)
+            return 0
+        old_path, old_doc, new_path, new_doc = pair
+
+    result = diff_stages(old_doc, new_doc, args.threshold, args.min_seconds)
+    result.update(
+        comparable=True,
+        old=os.path.basename(old_path),
+        new=os.path.basename(new_path),
+        threshold=args.threshold,
+        min_seconds=args.min_seconds,
+    )
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    print(f"[bench_diff] {result['old']} -> {result['new']}")
+    for row in result["rows"]:
+        if row.get("old_s") is None or row.get("new_s") is None:
+            continue
+        mark = " REGRESSION" if row.get("regression") else ""
+        print(
+            f"  {row['stage']}: {row['old_s']:.3f}s -> {row['new_s']:.3f}s "
+            f"({row.get('ratio', 0):.2f}x){mark}"
+        )
+    if result["regressions"]:
+        print(
+            f"[bench_diff] FAIL: {len(result['regressions'])} stage(s) "
+            f"regressed beyond {args.threshold:.2f}x (+{args.min_seconds}s)"
+        )
+        return 1
+    print("[bench_diff] OK: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

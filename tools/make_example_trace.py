@@ -1,0 +1,74 @@
+"""Regenerate the committed example telemetry artifacts.
+
+    PYTHONPATH=src python tools/make_example_trace.py
+
+Runs one mixed grid + stream + serve experiment with ``workers=2`` under
+a span trace (``docs/OBSERVABILITY.md``) and writes the merged
+cross-process ``RunTrace`` plus its Chrome trace-event rendering to:
+
+- ``results/example_run.trace.json``
+- ``results/example_run.chrome.json``
+
+The artifact cache and span directory are ephemeral; only the two
+results files are produced.  Span timings are host-dependent, so the
+committed copies are illustrative, not gated — CI gates the trace
+*machinery* via ``tests/test_obs.py`` instead.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+
+def main() -> int:
+    from repro.core import ArtifactCache, Experiment, WorkloadCache
+    from repro.core.driver import WorkloadSpec
+    from repro.core.obs import spans as obs
+    from repro.serve import ServeSpec, TenantSpec
+    from repro.stream import SlidingWindow, StreamSpec
+    from tools.trace_export import chrome_trace
+
+    out_dir = REPO / "results"
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = WorkloadCache(artifacts=ArtifactCache(Path(tmp) / "arts"))
+        exp = Experiment(
+            workloads=[
+                WorkloadSpec(kernel="pgd", dataset="tiny"),
+                StreamSpec(
+                    kernel="pgd",
+                    dataset="tiny",
+                    churn=SlidingWindow(),
+                    epochs=3,
+                ),
+                ServeSpec(
+                    tenants=(TenantSpec("pgd", "tiny"), TenantSpec("cc", "tiny"))
+                ),
+            ],
+            prefetchers=["amc", "nextline2"],
+            cache=cache,
+        )
+        with obs.trace(dir=Path(tmp) / "trace") as t:
+            result = exp.run(workers=2)
+        rt = t.result
+
+    assert result.telemetry.get("trace_id") == t.trace_id
+    rt.save(out_dir / "example_run.trace.json")
+    doc = chrome_trace(rt)
+    with open(out_dir / "example_run.chrome.json", "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    names = sorted({s.name for s in rt.spans})
+    print(f"[example-trace] {len(rt.spans)} spans, {rt.processes()}")
+    print(f"[example-trace] span names: {', '.join(names)}")
+    print(f"[example-trace] wrote {out_dir}/example_run.{{trace,chrome}}.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
