@@ -56,6 +56,25 @@ histograms), and the merged span-trace summary covering parent and
 worker processes.  ``tools/bench_diff.py`` gates CI on consecutive
 documents; ``tools/trace_export.py`` renders traces for Perfetto.
 
+Schema v9 adds the fused hierarchy-engine section: the default ``fused``
+engine runs L1→L2→LLC demand simulation as ONE carried set-parallel scan
+(per-access hit levels, no inter-level host round trips; a cost-based
+plan chooser keeps short or run-light streams on the bit-identical
+cascade) and batches the per-prefetcher scoring passes of one workload
+into one vmapped launch per level, so the stage breakdown's
+``cache_pass`` dict carries one ``fused`` key per fused-engine demand
+walk (the always-zero ``score_cache_pass[l1]`` key is gone; only stages
+that actually ran are emitted — ``tools/bench_diff.py`` aliases the
+fused key to the sum of its per-level predecessors across the
+transition).  The section runs a compile-warmed demand+score A/B of the
+fused path against the per-level ``set_parallel`` cascade on the stage
+cell — the committed ``speedup`` is the ratio of engine-attributable
+seconds (the ``demand_sim`` stage plus the scoring ``cache_pass[*]``
+stages; stream generation and the shared host-side outcome analysis are
+engine-independent) — reports the wall times and fused launch counters
+alongside, and gates the exit code on fused-vs-reference bit identity
+(hit masks + scored rows, batched and looped).
+
 The dated JSONs accumulate as the repo's machine-readable perf trajectory;
 CI runs ``--smoke`` (1 kernel x 1 dataset x 3 prefetchers) on every push,
 uploads the JSON as a build artifact, and fails this script (exit 1) when
@@ -87,7 +106,7 @@ from pathlib import Path
 
 sys.path.insert(0, "src")
 
-SCHEMA_VERSION = 8
+SCHEMA_VERSION = 9
 
 # Three prefetchers spanning the suite's families: the paper's contribution
 # (amc), a spatial baseline (vldp), and a replay baseline (rnr).  The
@@ -292,7 +311,7 @@ def main(argv=None) -> int:
 
     from repro.core import WorkloadSpec
     from repro.core.exec.scheduler import rows_equal
-    from repro.core.exec.timers import collect_stages, time_s
+    from repro.core.exec.timers import collect_stages, stage, time_s
     from repro.core.experiment import score_prefetcher
     from repro.core.registry import resolve_prefetchers
     from repro.memsim import current_engine, simulate_demand, use_engine
@@ -334,8 +353,14 @@ def main(argv=None) -> int:
         print(f"[bench] score {name}: {score_s[name]:.2f}s")
 
     def _level_times(d):
+        # Only stages that actually ran: the fused engine (default) emits
+        # one cache_pass[fused] stage per hierarchy walk, the per-level
+        # engines emit l1/l2/llc — schema v9 drops the always-zero keys
+        # (notably score_cache_pass[l1]; scoring never touches L1).
         return {
-            lvl: d.get(f"cache_pass[{lvl}]", 0.0) for lvl in ("l1", "l2", "llc")
+            lvl: d[f"cache_pass[{lvl}]"]
+            for lvl in ("l1", "l2", "llc", "fused")
+            if f"cache_pass[{lvl}]" in d
         }
 
     # --- trace-emitter gate + micro-bench (schema v4): the batched
@@ -429,6 +454,116 @@ def main(argv=None) -> int:
                 "serial lax.scan reference",
                 file=sys.stderr,
             )
+
+    # --- fused hierarchy engine (schema v9): compile-warmed demand+score
+    # A/B of the fused path (one L1→L2→LLC carried scan per demand walk,
+    # one vmapped launch per level for the scored prefetcher family)
+    # against the per-level set_parallel cascade, on the stage cell.
+    # Both sides run once untimed first so the comparison measures steady
+    # state, not per-shape XLA compiles.  The committed speedup is the
+    # ratio of engine-attributable seconds — the demand_sim stage plus
+    # the scoring cache_pass[*] stages; prefetch-stream generation and
+    # the host-side outcome analysis are engine-independent and would
+    # only dilute the ratio toward 1.  Bit identity is gated into the
+    # exit code: the fused profile masks and scored rows — batched AND
+    # looped — must equal the per-level engine's, which the engine gate
+    # above ties to the serial reference oracle.
+    from repro.core.experiment import score_prefetchers_batched
+    from repro.core.obs import spans as obs
+
+    stage_pairs = resolve_prefetchers(stage_names)
+    blocks, iters, cfg = trace.block, trace.iter_id, trace.spec.hierarchy
+    rows_box: dict = {}
+
+    def _demand():
+        with stage("demand_sim"):
+            return simulate_demand(blocks, iters, cfg)
+
+    def _score_loop():
+        rows_box["loop"] = [
+            score_prefetcher(trace, n_, g_).row() for n_, g_ in stage_pairs
+        ]
+
+    def _score_batched():
+        rows_box["batched"] = [
+            m.row() for m in score_prefetchers_batched(trace, stage_pairs)
+        ]
+
+    def _engine_seconds(d):
+        # demand_sim already contains its nested cache_pass[*] stages
+        # (stage timers accumulate flat, so both keys cover the same
+        # seconds) — summing both would double-count the demand walk.
+        if "demand_sim" in d:
+            return d["demand_sim"]
+        return sum(v for k, v in d.items() if k.startswith("cache_pass["))
+
+    def _timed_stages(fn):
+        d: dict = {}
+        t0 = time.perf_counter()
+        with collect_stages(into=d):
+            fn()
+        return time.perf_counter() - t0, d
+
+    with use_engine("set_parallel"):
+        _demand(), _score_loop()  # warm per-shape compiles untimed
+        pl_demand_w, pl_demand_stages = _timed_stages(_demand)
+        pl_score_w, pl_score_stages = _timed_stages(_score_loop)
+        pl_rows = rows_box["loop"]
+    pl_demand_s = _engine_seconds(pl_demand_stages)
+    pl_score_s = _engine_seconds(pl_score_stages)
+    with use_engine("fused"):
+        _demand(), _score_batched()  # warm per-shape compiles untimed
+        # the metrics registry opens after the warm-up, so the committed
+        # launch counters cover exactly one timed demand+score pass
+        with obs.metrics_registry() as fused_metrics:
+            fu_demand_w, fu_demand_stages = _timed_stages(_demand)
+            fu_score_w, fu_score_stages = _timed_stages(_score_batched)
+        fu_batch_rows = rows_box["batched"]
+        _score_loop()
+        fu_loop_rows = rows_box["loop"]
+        fu_prof = simulate_demand(blocks, iters, cfg)
+    fu_demand_s = _engine_seconds(fu_demand_stages)
+    fu_score_s = _engine_seconds(fu_score_stages)
+    fused_speedup = (pl_demand_s + pl_score_s) / max(
+        fu_demand_s + fu_score_s, 1e-9
+    )
+    if engine == "fused":
+        # The engine gate above already compared the fused engine (the
+        # session default, used to build `trace`) against the reference.
+        fused_vs_ref = engine_ok
+    else:
+        with use_engine("reference"):
+            fr_prof = simulate_demand(blocks, iters, cfg)
+            fr_row = score_prefetcher(trace, *stage_pairs[0]).row()
+        with use_engine("fused"):
+            ff_row = score_prefetcher(trace, *stage_pairs[0]).row()
+        fused_vs_ref = bool(
+            np.array_equal(fu_prof.l1_hit, fr_prof.l1_hit)
+            and np.array_equal(fu_prof.l2_hit, fr_prof.l2_hit)
+            and np.array_equal(fu_prof.llc_hit, fr_prof.llc_hit)
+        ) and rows_equal([ff_row], [fr_row])
+    fused_ok = (
+        fused_vs_ref
+        and rows_equal(pl_rows, fu_loop_rows)
+        and rows_equal(pl_rows, fu_batch_rows)
+    )
+    print(
+        f"[bench] fused demand+score engine-s: "
+        f"{fu_demand_s + fu_score_s:.2f}s vs per-level "
+        f"{pl_demand_s + pl_score_s:.2f}s (x{fused_speedup:.2f}, wall "
+        f"{fu_demand_w + fu_score_w:.2f}s vs "
+        f"{pl_demand_w + pl_score_w:.2f}s, "
+        f"identity {'ok' if fused_ok else 'DIVERGED'}, "
+        f"launches {fused_metrics.counter('fused.launches'):.0f}, "
+        f"batched streams "
+        f"{fused_metrics.counter('fused.batched_streams'):.0f})"
+    )
+    if not fused_ok:
+        print(
+            "[bench] FUSED FAILURE: fused hierarchy engine diverges from "
+            "the per-level/reference path",
+            file=sys.stderr,
+        )
     del trace
 
     # --- end-to-end grid wall-clock: serial cold, then warm cache per pool.
@@ -766,13 +901,13 @@ def main(argv=None) -> int:
                 mat_s = time.perf_counter() - t0
                 gauge[gd] = {"kernel": gk, "materialize_s": round(mat_s, 2)}
                 print(f"[bench] sharded gauge: {gk}/{gd} built {mat_s:.1f}s")
-            # One discarded warm-up run lands the long cell's XLA compiles
-            # in the shared persistent compilation cache, so both measured
-            # children pay zero compile-time memory spikes and the gauge
-            # compares streaming-state footprints only.
-            _gauge_child_run(
-                *SHARD_RSS_CELLS[-1], SHARD_GAUGE_ACCESSES, cache_dir
-            )
+            # One discarded warm-up run per cell lands every shard-shape's
+            # XLA compiles in the shared persistent compilation cache —
+            # including each cell's unique remainder-shard bucket — so the
+            # measured children pay zero compile-time memory spikes and
+            # the gauge compares streaming-state footprints only.
+            for gk, gd, gs in SHARD_RSS_CELLS:
+                _gauge_child_run(gk, gd, gs, SHARD_GAUGE_ACCESSES, cache_dir)
             for gk, gd, gs in SHARD_RSS_CELLS:
                 rep = _gauge_child_run(
                     gk, gd, gs, SHARD_GAUGE_ACCESSES, cache_dir
@@ -839,6 +974,28 @@ def main(argv=None) -> int:
                 "trace_emit": ref_stages.get("trace_emit", 0.0),
             },
             "micro": emitter_micro,
+        },
+        # Schema v9: the fused hierarchy engine — compile-warmed
+        # demand+score A/B against the per-level set_parallel cascade on
+        # the stage cell.  ``speedup`` is the engine-attributable ratio
+        # (demand_sim stage + scoring cache_pass[*] stages; generation
+        # and shared host analysis excluded), ``wall_s`` the raw wall
+        # clocks of the same timed runs; launch counters cover exactly
+        # the timed fused pass, and the bit-identity verdict is gated
+        # into the exit code.
+        "fused": {
+            "cell": f"{cells[0][0]}/{cells[0][1]}#s{cells[0][2]}",
+            "prefetchers": stage_names,
+            "per_level_s": {"demand_sim": pl_demand_s, "score": pl_score_s},
+            "fused_s": {"demand_sim": fu_demand_s, "score": fu_score_s},
+            "wall_s": {
+                "per_level": {"demand_sim": pl_demand_w, "score": pl_score_w},
+                "fused": {"demand_sim": fu_demand_w, "score": fu_score_w},
+            },
+            "speedup": fused_speedup,
+            "launches": fused_metrics.counter("fused.launches"),
+            "batched_streams": fused_metrics.counter("fused.batched_streams"),
+            "matches_reference": fused_ok,
         },
         "wallclock_s": {"serial_cold": serial_cold_s, "warm_by_workers": warm},
         "speedup_vs_serial_cold": {
@@ -935,6 +1092,7 @@ def main(argv=None) -> int:
         },
         "parallel_matches_serial": parity,
         "engine_matches_reference": engine_ok,
+        "fused_matches_reference": fused_ok,
         "emitter_matches_reference": emitter_ok,
         "sharded_rss_flat": rss_flat,
         "sched_auto_not_slower": auto_not_slower,
@@ -959,6 +1117,7 @@ def main(argv=None) -> int:
         if (
             parity
             and engine_ok
+            and fused_ok
             and emitter_ok
             and rss_flat
             and auto_not_slower

@@ -43,6 +43,7 @@ from repro.core.experiment import (
     ExperimentResult,
     WorkloadCache,
     score_prefetcher,
+    score_prefetchers_batched,
 )
 from repro.core.registry import (
     Prefetcher,
@@ -67,6 +68,7 @@ __all__ = [
     "ExperimentResult",
     "WorkloadCache",
     "score_prefetcher",
+    "score_prefetchers_batched",
     "Prefetcher",
     "PrefetcherSpec",
     "get_prefetcher",

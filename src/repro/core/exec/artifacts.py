@@ -179,6 +179,54 @@ class ArtifactCache:
         except (OSError, zipfile.BadZipFile):
             return False
 
+    # ---------------------------------------------- measured-cost sidecar
+    #
+    # Workers and the serial runner record *measured* build/score seconds
+    # next to each artifact; the scheduler's cost model prefers these over
+    # its static per-access constants (see ``scheduler.estimate_cost``).
+    # The sidecar shares the artifact's content digest, so anything that
+    # moves the artifact key (spec change, TRACE_CODE_VERSION bump)
+    # orphans the stale timings with it.
+
+    def cost_path(self, spec) -> Path:
+        return self.path_for(spec).with_suffix(".cost.json")
+
+    def load_cost(self, spec) -> Optional[dict]:
+        """Measured timings for ``spec``: ``{"build_s": float,
+        "score_s_per_prefetcher": float}`` (either key may be absent), or
+        None when nothing was recorded (unreadable == absent)."""
+        try:
+            with open(self.cost_path(spec)) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            return None
+        return doc if isinstance(doc, dict) else None
+
+    def record_cost(self, spec, **seconds: float) -> None:
+        """Merge measured timing fields into ``spec``'s cost sidecar.
+
+        Latest measurement wins per field; writes are atomic and failures
+        are swallowed — a missing sidecar only costs the scheduler its
+        constant-based fallback estimate.
+        """
+        doc = self.load_cost(spec) or {}
+        doc.update({k: float(v) for k, v in seconds.items()})
+        try:
+            self.root.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(doc, f, sort_keys=True)
+                os.replace(tmp, self.cost_path(spec))
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        except OSError:
+            pass
+
     # ---------------------------------------------- sharded trace store
     #
     # A paper-scale trace is stored as fixed-size shard files plus one

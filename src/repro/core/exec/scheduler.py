@@ -78,8 +78,10 @@ def _materialize(spec: WorkloadSpec, cache_root: str) -> Optional[WorkloadTrace]
             sp.attrs["cache_key"] = cache.path_for(spec).name
         trace = cache.load(spec)
         if trace is None:
+            t0 = time.perf_counter()
             trace = spec.build()
             cache.save(spec, trace)
+            cache.record_cost(spec, build_s=time.perf_counter() - t0)
             if sp:
                 sp.attrs["cache"] = "build"
             obs.inc("artifact.builds")
@@ -133,6 +135,7 @@ def _run_task(task) -> Tuple[int, List[Tuple[str, PrefetchMetrics]]]:
                     flush=True,
                 )
             scored = []
+            score_t0 = time.perf_counter()
             for name, gen in prefetchers:
                 t0 = time.perf_counter()
                 scored.append((name, score_prefetcher(trace, name, gen)))
@@ -142,6 +145,13 @@ def _run_task(task) -> Tuple[int, List[Tuple[str, PrefetchMetrics]]]:
                         f"score {name} {time.perf_counter() - t0:.1f}s",
                         flush=True,
                     )
+            if prefetchers:
+                ArtifactCache(cache_root).record_cost(
+                    spec,
+                    score_s_per_prefetcher=(
+                        (time.perf_counter() - score_t0) / len(prefetchers)
+                    ),
+                )
             return index, scored
     finally:
         # Task boundary: land this process's cumulative counters so the
@@ -207,18 +217,22 @@ def _check_picklable(prefetchers: Sequence[tuple]) -> None:
 # workers=2 took 15.5s against 9.9s serial on a 1-CPU box), the model
 # degrades to serial in-process execution and no pool is spawned at all.
 #
-# Costs come from metadata the artifact cache already records: a
-# materialized trace's compressed size is a direct access-count proxy
-# (``measured``); a cold spec falls back to a dataset-size estimate from
-# the DATASETS registry.  The constants below are calibrated against the
-# committed BENCH_2026-08-07.json stage breakdown (pgd/comdblp: ~2.6M
-# accesses, 3.7s build, ~1s/prefetcher score, ~2.5s pool spawn) — they
-# only need order-of-magnitude fidelity, because the decision margins
-# they guard (spawn overhead vs multi-core speedup) are themselves
+# Costs come from metadata the artifact cache already records, preferred
+# in this order: *measured* build/score seconds persisted in each
+# artifact's cost sidecar by earlier runs (``ArtifactCache.record_cost``);
+# a materialized trace's compressed size as a direct access-count proxy
+# (``measured``); and, cold, a dataset-size estimate from the DATASETS
+# registry.  The per-access constants below are therefore first-run
+# fallbacks only, calibrated against the committed BENCH stage breakdown
+# under the fused hierarchy engine (pgd/comdblp: ~2.6M accesses, one
+# fused demand launch instead of three per-level passes at build, one
+# batched score launch per prefetcher family) — they only need
+# order-of-magnitude fidelity, because the decision margins they guard
+# (spawn overhead vs multi-core speedup) are themselves
 # order-of-magnitude.
 
-BUILD_S_PER_ACCESS = 1.4e-6  # trace_gen + demand_sim + artifact save
-SCORE_S_PER_ACCESS = 4.0e-7  # one prefetcher's composite scoring pass
+BUILD_S_PER_ACCESS = 1.1e-6  # trace_gen + fused demand_sim + artifact save
+SCORE_S_PER_ACCESS = 3.0e-7  # one prefetcher's composite scoring pass
 LOAD_S_PER_ACCESS = 5.0e-8  # artifact load + session rebuild
 ARTIFACT_BYTES_PER_ACCESS = 12.0  # compressed .npz size -> access count
 TRACE_BYTES_PER_ACCESS = 80.0  # resident trace working set per access
@@ -298,10 +312,15 @@ def _estimate_accesses(spec) -> float:
 def estimate_cost(spec, n_prefetchers: int, artifacts: ArtifactCache) -> TaskCost:
     """Predict build/score cost for one spec from cache metadata.
 
-    Materialized specs are sized from their artifact's compressed size
-    (sharded specs from the manifest's exact access count) and pay only a
-    load, not a build; cold specs fall back to the DATASETS-derived
-    estimate.  Deterministic given the artifact store's state.
+    Measured per-task seconds from the artifact's cost sidecar
+    (:meth:`~repro.core.exec.artifacts.ArtifactCache.record_cost`) beat
+    every constant: a recorded ``score_s_per_prefetcher`` prices scoring
+    exactly, and a recorded ``build_s`` prices a rebuild of a spec whose
+    artifact is gone but whose sidecar survived.  Otherwise materialized
+    specs are sized from their artifact's compressed size (sharded specs
+    from the manifest's exact access count) and pay only a load, not a
+    build; cold specs fall back to the DATASETS-derived estimate.
+    Deterministic given the artifact store's state.
     """
     accesses: Optional[float] = None
     measured = False
@@ -317,15 +336,21 @@ def estimate_cost(spec, n_prefetchers: int, artifacts: ArtifactCache) -> TaskCos
             pass
     if accesses is None:
         accesses = _estimate_accesses(spec)
-    build_s = (
-        accesses * LOAD_S_PER_ACCESS
-        if measured
-        else accesses * BUILD_S_PER_ACCESS
-    )
+    recorded = artifacts.load_cost(spec) or {}
+    if measured:
+        build_s = accesses * LOAD_S_PER_ACCESS
+    elif "build_s" in recorded:
+        build_s, measured = float(recorded["build_s"]), True
+    else:
+        build_s = accesses * BUILD_S_PER_ACCESS
+    if "score_s_per_prefetcher" in recorded:
+        score_s = float(recorded["score_s_per_prefetcher"]) * n_prefetchers
+    else:
+        score_s = accesses * SCORE_S_PER_ACCESS * n_prefetchers
     return TaskCost(
         spec=spec,
         build_s=build_s,
-        score_s=accesses * SCORE_S_PER_ACCESS * n_prefetchers,
+        score_s=score_s,
         resident_bytes=accesses * TRACE_BYTES_PER_ACCESS,
         measured=measured,
     )

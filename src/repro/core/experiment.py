@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 from collections.abc import Mapping, Sequence as _SequenceABC
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -44,8 +45,10 @@ from repro.memsim import (
     SCALED,
     HierarchyConfig,
     PrefetchMetrics,
+    current_engine,
     evaluate,
     simulate_with_prefetch,
+    simulate_with_prefetch_batch,
 )
 
 
@@ -85,6 +88,66 @@ def score_prefetcher(
         )
         m.info = stream.info  # attach prefetcher-side stats
     return m
+
+
+def score_prefetchers_batched(
+    workload: WorkloadTrace, pairs: Sequence[Tuple[str, Prefetcher]]
+) -> List[PrefetchMetrics]:
+    """Score a family of prefetchers against one workload in one dispatch.
+
+    Under the ``fused`` engine every prefetcher's merged L2 stream joins a
+    single vmapped L2→LLC scan (:func:`simulate_with_prefetch_batch`), so
+    the per-prefetcher ``score_cache_pass`` launches collapse into one
+    batched launch; other engines — and single-member families — fall back
+    to looping :func:`score_prefetcher`.  Metrics are bit-identical to the
+    loop either way (test-asserted), so callers may mix paths freely.
+    """
+    if len(pairs) <= 1 or current_engine() != "fused":
+        return [score_prefetcher(workload, n, g) for n, g in pairs]
+    with obs.span(
+        "score_batch",
+        prefetchers=",".join(n for n, _ in pairs),
+        kernel=workload.spec.kernel,
+        dataset=workload.spec.dataset,
+    ), stage("score"):
+        items, metas, infos = [], [], []
+        for name, gen in pairs:
+            # Per-cell child span over the prefetcher-specific compute
+            # (stream generation — table training etc.); the joint
+            # simulate/evaluate time stays on the parent batch span.
+            with obs.span(
+                "score_cell",
+                prefetcher=name,
+                kernel=workload.spec.kernel,
+                dataset=workload.spec.dataset,
+                batched=True,
+            ):
+                stream = gen(workload)
+            blocks = np.concatenate([workload.nl_blocks, stream.blocks])
+            pos = np.concatenate([workload.nl_pos, stream.pos])
+            issuer = np.concatenate(
+                [
+                    np.zeros(len(workload.nl_blocks), np.int8),
+                    np.ones(len(stream.blocks), np.int8),
+                ]
+            )
+            items.append((blocks, pos, issuer))
+            metas.append(stream.metadata_bytes)
+            infos.append(stream.info)
+        outcomes = simulate_with_prefetch_batch(workload.profile, items, metas)
+        out = []
+        for (name, _), outcome, info in zip(pairs, outcomes, infos):
+            m = evaluate(
+                name,
+                workload.profile,
+                outcome,
+                baseline_outcome=workload.nl_outcome,
+                eval_from_pos=workload.eval_from_pos,
+                issuer=1,
+            )
+            m.info = info
+            out.append(m)
+    return out
 
 
 def _retarget_trace(trace: WorkloadTrace, spec) -> WorkloadTrace:
@@ -160,9 +223,13 @@ class WorkloadCache:
                 obs.inc("workload_cache.builds")
                 if sp:
                     sp.attrs["cache"] = "build"
+                t0 = time.perf_counter()
                 trace = spec.build()
                 if self.artifacts is not None:
                     self.artifacts.save(spec, trace)
+                    self.artifacts.record_cost(
+                        spec, build_s=time.perf_counter() - t0
+                    )
             if ck is not None:
                 self._by_content.setdefault(ck, trace)
             self._store[spec] = trace
@@ -540,8 +607,16 @@ class Experiment:
                 continue
             w = self.cache.get_or_build(spec)
             traces[spec] = w
-            for name, gen in self.prefetchers:
-                m = score_prefetcher(w, name, gen)
+            t0 = time.perf_counter()
+            metrics = score_prefetchers_batched(w, self.prefetchers)
+            if self.cache.artifacts is not None and self.prefetchers:
+                self.cache.artifacts.record_cost(
+                    spec,
+                    score_s_per_prefetcher=(
+                        (time.perf_counter() - t0) / len(self.prefetchers)
+                    ),
+                )
+            for (name, gen), m in zip(self.prefetchers, metrics):
                 cells.append(
                     CellResult(
                         kernel=spec.kernel,
@@ -829,4 +904,5 @@ __all__ = [
     "ExperimentResult",
     "WorkloadCache",
     "score_prefetcher",
+    "score_prefetchers_batched",
 ]

@@ -1,0 +1,111 @@
+"""Fused multi-level LRU hierarchy simulation as a Pallas TPU kernel.
+
+The fused engine (:mod:`repro.memsim.fused`) carries every hierarchy
+level's tag/age lanes in one scan over group substreams.  On TPU the
+grouped layout maps the same way the single-level kernel does: groups
+tile the grid's sublane dimension, the time axis lives in lanes of the
+substream block, and each grid step walks its tile's time axis with all
+levels' carries resident in VMEM — the L1/L2/LLC update is pure VPU work
+per step, and the emitted value is the *hit level* (0 = outermost level
+… K = missed everywhere) rather than a single level's hit bit.
+
+Unlike the host-side fused scan (which gathers only the accessed set's
+ways per step — the right trade on CPU), the kernel keeps each level's
+full ``R·ways`` lane vector live and masks by the accessed relative set:
+lanes are what the VPU gives away for free, and one-hot selects avoid
+dynamic scatters exactly as in :mod:`repro.kernels.cache_sim.cache_sim`.
+State enters and leaves through refs, so chunked passes resume exactly
+where the previous chunk stopped; pads (``b == -1``) emit a
+(never-gathered) level but are masked out of every update.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_tile_kernel(levels, blocks_ref, *refs):
+    # refs: (tags_in, age_in) per level, then lvl_ref, (tags_out, age_out)
+    # per level.  blocks_ref block: (group_tile, L) padded group substreams.
+    k = len(levels)
+    groups = min(sets for sets, _ in levels)
+    lg = groups.bit_length() - 1
+    ins = refs[: 2 * k]
+    lvl_ref = refs[2 * k]
+    outs = refs[2 * k + 1 :]
+    for j in range(2 * k):
+        outs[j][...] = ins[j][...]
+    steps = blocks_ref.shape[1]
+    intmax = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+    def body(t, carry):
+        b = blocks_ref[:, pl.ds(t, 1)]  # (group_tile, 1)
+        alive = b >= 0
+        lvl = jnp.full(b.shape, k, jnp.int32)
+        for i, (sets, ways) in enumerate(levels):
+            tags = outs[2 * i][...]
+            age = outs[2 * i + 1][...]
+            lanes = jax.lax.broadcasted_iota(jnp.int32, (1, tags.shape[1]), 1)
+            rel = (b >> lg) & ((sets // groups) - 1)
+            lanemask = (lanes // ways) == rel
+            hitv = (tags == b) & lanemask
+            hit = hitv.any(axis=1, keepdims=True)
+            sel = jnp.where(
+                hit,
+                jnp.argmax(hitv, axis=1, keepdims=True),
+                jnp.argmin(
+                    jnp.where(lanemask, age, intmax), axis=1, keepdims=True
+                ),
+            ).astype(jnp.int32)
+            onehot = (sel == lanes) & alive
+            outs[2 * i][...] = jnp.where(onehot, b, tags)
+            outs[2 * i + 1][...] = jnp.where(onehot, t + 1, age)
+            lvl = jnp.where(alive & hit, jnp.int32(i), lvl)
+            alive = alive & ~hit
+        lvl_ref[:, pl.ds(t, 1)] = lvl
+        return carry
+
+    jax.lax.fori_loop(0, steps, body, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("levels", "group_tile", "interpret")
+)
+def fused_levels_pallas(
+    padded: jnp.ndarray,  # (groups, L) int32 group substreams, tail-padded -1
+    levels,  # ((sets, ways), ...) outer→inner, static
+    *state,  # tags0, age0 per level, each (groups, R·ways) int32
+    group_tile: int = 8,
+    interpret: bool = False,
+):
+    """Hit levels plus final (raw) per-level states, resuming from carries.
+
+    Returns ``(lvls, tags_0, age_0, …)`` with ``lvls`` ``(groups, L)``
+    int32 — the same tuple layout as the host scan, so the engine's
+    scatter/canonicalize epilogue is shared between backends.
+    """
+    groups, length = padded.shape
+    group_tile = min(group_tile, groups)
+    assert groups % group_tile == 0, (groups, group_tile)
+    grid = (groups // group_tile,)
+    stream_spec = pl.BlockSpec((group_tile, length), lambda i: (i, 0))
+    state_specs = [
+        pl.BlockSpec((group_tile, st.shape[1]), lambda i: (i, 0))
+        for st in state
+    ]
+    state_shapes = [
+        jax.ShapeDtypeStruct((groups, st.shape[1]), jnp.int32) for st in state
+    ]
+    out = pl.pallas_call(
+        functools.partial(_fused_tile_kernel, tuple(levels)),
+        grid=grid,
+        in_specs=[stream_spec] + state_specs,
+        out_specs=[stream_spec] + state_specs,
+        out_shape=[jax.ShapeDtypeStruct((groups, length), jnp.int32)]
+        + state_shapes,
+        interpret=interpret,
+    )(padded, *state)
+    return tuple(out)

@@ -11,9 +11,13 @@ Methodology (two-pass functional simulation, DESIGN.md §2.1):
   pass LLC     : L2-miss substream  -> off-chip (DRAM) access counts
 
 Every pass runs through :func:`repro.memsim.engine.cache_pass` — by default
-the set-parallel batched engine (sets simulated concurrently, scan length
-~N/sets), with the original serial ``lax.scan`` retained as the
-bit-identical ``reference`` engine (``REPRO_CACHE_ENGINE=reference``).
+the ``fused`` engine (:mod:`repro.memsim.fused`), which carries all the
+levels a simulation touches in one set-parallel scan and emits per-access
+hit levels directly, collapsing the passes above into a single launch.
+The per-level set-parallel engine (sets simulated concurrently, scan
+length ~N/sets) remains as ``set_parallel``, and the original serial
+``lax.scan`` is the bit-identical ``reference`` oracle
+(``REPRO_CACHE_ENGINE=reference``).
 
 Timing is a calibrated miss-penalty IPC model with measured MLP overlap
 (:mod:`repro.memsim.timing`), reproducing the paper's *relative* speedups.
@@ -26,12 +30,15 @@ from repro.memsim.engine import (
     set_engine,
     use_engine,
 )
+from repro.memsim.fused import fused_cache_pass, fused_cache_pass_batch
 from repro.memsim.scan_cache import classify_prefetch_events
 from repro.memsim.hierarchy import (
     DemandProfile,
     PrefetchOutcome,
     simulate_demand,
+    simulate_demand_batch,
     simulate_with_prefetch,
+    simulate_with_prefetch_batch,
 )
 from repro.memsim.timing import TimingModel, estimate_cycles
 from repro.memsim.metrics import PrefetchMetrics, evaluate, geomean, summarize_epochs
@@ -45,12 +52,16 @@ __all__ = [
     "cache_pass",
     "classify_prefetch_events",
     "current_engine",
+    "fused_cache_pass",
+    "fused_cache_pass_batch",
     "set_engine",
     "use_engine",
     "DemandProfile",
     "PrefetchOutcome",
     "simulate_demand",
+    "simulate_demand_batch",
     "simulate_with_prefetch",
+    "simulate_with_prefetch_batch",
     "TimingModel",
     "estimate_cycles",
     "PrefetchMetrics",

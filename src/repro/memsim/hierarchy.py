@@ -16,12 +16,19 @@ import dataclasses
 import numpy as np
 
 from repro.memsim.config import HierarchyConfig
-from repro.memsim.engine import CacheState, cache_pass, init_state
+from repro.memsim.engine import (
+    CacheState,
+    cache_pass,
+    cache_pass_batch,
+    current_engine,
+    init_state,
+)
+from repro.memsim.fused import fused_cache_pass, fused_cache_pass_batch
 from repro.memsim.scan_cache import classify_prefetch_events
 
 
 def _stage(name: str):
-    """Per-level stage-timer hook (``cache_pass[l1|l2|llc]``).
+    """Per-level stage-timer hook (``cache_pass[l1|l2|llc|fused]``).
 
     Imported lazily: :mod:`repro.core.exec.timers` is dependency-free, but
     reaching it imports the ``repro.core`` package, which imports this
@@ -30,6 +37,26 @@ def _stage(name: str):
     from repro.core.exec.timers import stage
 
     return stage(name)
+
+
+def _count_launch(batched: int = 0) -> None:
+    """Metrics counters for fused-pass dispatches (no-op when obs is off):
+    ``fused.launches`` counts scan launches, ``fused.batched_streams`` the
+    streams a batched launch covered — together they make the
+    three-passes→one-launch collapse visible in the telemetry snapshot."""
+    from repro.core.obs.spans import inc
+
+    inc("fused.launches")
+    if batched:
+        inc("fused.batched_streams", batched)
+
+
+def _demand_levels(cfg: HierarchyConfig):
+    return (
+        (cfg.l1.sets, cfg.l1.ways),
+        (cfg.l2.sets, cfg.l2.ways),
+        (cfg.llc.sets, cfg.llc.ways),
+    )
 
 
 @dataclasses.dataclass
@@ -119,6 +146,8 @@ def simulate_demand(
     offset = 0
     if state is not None:
         offset = state.pos_offset
+    if current_engine() == "fused":
+        return _simulate_demand_fused(blocks, iter_id, cfg, state, return_state)
     with _stage("cache_pass[l1]"):
         l1_hit = cache_pass(
             blocks,
@@ -170,6 +199,87 @@ def simulate_demand(
         l1=l1_state, l2=l2_state, llc=llc_state, pos_offset=offset + len(blocks)
     )
     return profile, next_state
+
+
+def _profile_from_levels(
+    blocks: np.ndarray,
+    iter_id: np.ndarray,
+    cfg: HierarchyConfig,
+    lvl: np.ndarray,
+    offset: int,
+) -> DemandProfile:
+    """Unpack a fused pass's hit-level array (0=L1 hit, 1=L2, 2=LLC,
+    3=DRAM) into the cascaded per-level masks of :class:`DemandProfile` —
+    each level's mask covers exactly the miss substream of the level
+    above, identical to the per-level path by set independence."""
+    l1_hit = lvl == 0
+    l2_pos = np.flatnonzero(~l1_hit).astype(np.int64) + offset
+    l2_lvl = lvl[~l1_hit]
+    l2_hit = l2_lvl == 1
+    return DemandProfile(
+        blocks=blocks,
+        iter_id=iter_id,
+        l1_hit=l1_hit,
+        l2_pos=l2_pos,
+        l2_blocks=blocks[l2_pos - offset],
+        l2_iter=iter_id[l2_pos - offset],
+        l2_hit=l2_hit,
+        llc_hit=l2_lvl[~l2_hit] == 2,
+        cfg=cfg,
+    )
+
+
+def _simulate_demand_fused(
+    blocks: np.ndarray,
+    iter_id: np.ndarray,
+    cfg: HierarchyConfig,
+    state: DemandState | None,
+    return_state: bool,
+):
+    """One carried L1→L2→LLC scan instead of three passes with host-side
+    miss compaction between them (the ``fused`` engine's demand path)."""
+    offset = state.pos_offset if state is not None else 0
+    states = [state.l1, state.l2, state.llc] if state is not None else None
+    with _stage("cache_pass[fused]"):
+        res = fused_cache_pass(
+            blocks, _demand_levels(cfg), states, return_states=return_state
+        )
+        _count_launch()
+    lvl = res[0] if return_state else res
+    profile = _profile_from_levels(blocks, iter_id, cfg, lvl, offset)
+    if not return_state:
+        return profile
+    l1_state, l2_state, llc_state = res[1]
+    return profile, DemandState(
+        l1=l1_state, l2=l2_state, llc=llc_state, pos_offset=offset + len(blocks)
+    )
+
+
+def simulate_demand_batch(
+    items: list,
+    cfg: HierarchyConfig,
+) -> list:
+    """Demand-simulate same-hierarchy traces as one batched dispatch.
+
+    ``items`` is a list of ``(blocks, iter_id)`` pairs (e.g. the seed
+    replicas of one bench cell).  Under the ``fused`` engine the traces
+    pad to a common bucket and run as a single vmapped scan when the
+    cost-based plan chooser picks the carried scan for every member
+    (run-collapse shrank each bucket); otherwise they loop through the
+    bit-identical per-stream plan.  Other engines loop
+    :func:`simulate_demand`.  Results are bit-identical either way.
+    """
+    if current_engine() != "fused":
+        return [simulate_demand(b, it, cfg) for b, it in items]
+    with _stage("cache_pass[fused]"):
+        lvls = fused_cache_pass_batch(
+            [b for b, _ in items], _demand_levels(cfg)
+        )
+        _count_launch(batched=len(items))
+    return [
+        _profile_from_levels(b, it, cfg, lvl, 0)
+        for (b, it), lvl in zip(items, lvls)
+    ]
 
 
 @dataclasses.dataclass
@@ -247,6 +357,86 @@ def simulate_with_prefetch(
             else None,
         )
 
+    merged = _merge_prefetch_stream(profile, pf_blocks, pf_pos, pf_issuer)
+    mblocks_s = merged["mblocks_s"]
+    # Scoring a single stream runs the per-level cascade under every
+    # engine: the L2 substream has no L1-filterable runs to collapse, so
+    # a carried L2→LLC scan would add gather/scatter cost per step
+    # without removing any.  The fused engine's scoring win is *batching*
+    # — see simulate_with_prefetch_batch.
+    with _stage("cache_pass[l2]"):
+        hit = cache_pass(mblocks_s, cfg.l2.sets, cfg.l2.ways)
+    # LLC sees every L2 miss (demand or prefetch) in order.
+    with _stage("cache_pass[llc]"):
+        llc_hit = cache_pass(
+            mblocks_s[~hit], cfg.llc.sets, cfg.llc.ways
+        )
+    return _finish_prefetch_outcome(
+        profile, merged, hit, llc_hit, metadata_bytes, keep_llc_stream
+    )
+
+
+def simulate_with_prefetch_batch(
+    profile: DemandProfile,
+    streams: list,
+    metadata_bytes: list | None = None,
+    keep_llc_stream: bool = False,
+) -> list:
+    """Score several prefetch streams against one profile in one dispatch.
+
+    ``streams`` is a list of ``(pf_blocks, pf_pos, pf_issuer)`` triples
+    (``pf_issuer`` may be None) — typically one per prefetcher family of a
+    workload.  Under the ``fused`` engine the merged L2 streams pad to a
+    common bucket and run as one vmapped set-parallel launch per level
+    (:func:`repro.memsim.engine.cache_pass_batch`) — the family's
+    ``2 × n_prefetchers`` scoring launches collapse to two; other engines
+    (and empty streams) loop :func:`simulate_with_prefetch`.  Outcomes
+    are bit-identical to the loop either way.
+    """
+    meta = metadata_bytes if metadata_bytes is not None else [0] * len(streams)
+    if current_engine() != "fused" or any(len(s[0]) == 0 for s in streams):
+        return [
+            simulate_with_prefetch(
+                profile, b, p, issuer, m, keep_llc_stream=keep_llc_stream
+            )
+            for (b, p, issuer), m in zip(streams, meta)
+        ]
+    cfg = profile.cfg
+    merged = [
+        _merge_prefetch_stream(profile, b, p, issuer) for b, p, issuer in streams
+    ]
+    with _stage("cache_pass[l2]"):
+        l2_hits = cache_pass_batch(
+            [m["mblocks_s"] for m in merged], cfg.l2.sets, cfg.l2.ways
+        )
+        _count_launch(batched=len(streams))
+    with _stage("cache_pass[llc]"):
+        llc_hits = cache_pass_batch(
+            [m["mblocks_s"][~h] for m, h in zip(merged, l2_hits)],
+            cfg.llc.sets,
+            cfg.llc.ways,
+        )
+        _count_launch(batched=len(streams))
+    return [
+        _finish_prefetch_outcome(profile, m, h, lh, mb, keep_llc_stream)
+        for m, h, lh, mb in zip(merged, l2_hits, llc_hits, meta)
+    ]
+
+
+def _merge_prefetch_stream(
+    profile: DemandProfile,
+    pf_blocks: np.ndarray,
+    pf_pos: np.ndarray,
+    pf_issuer: np.ndarray | None,
+) -> dict:
+    """Interleave a prefetch stream into the demand L2 substream.
+
+    Demand events land at doubled positions ``2p``, prefetches at
+    ``2p+1``.  Both substreams are position-sorted, so the merge is a
+    single searchsorted instead of a full argsort of the concatenation.
+    """
+    nd = len(profile.l2_blocks)
+    npf = len(pf_blocks)
     pf_blocks = np.asarray(pf_blocks, dtype=np.int64)
     pf_pos = np.asarray(pf_pos, dtype=np.int64)
     if pf_issuer is None:
@@ -256,9 +446,6 @@ def simulate_with_prefetch(
         o = np.argsort(pf_pos, kind="stable")
         pf_pos, pf_blocks, pf_issuer = pf_pos[o], pf_blocks[o], pf_issuer[o]
 
-    # Merge demand (at 2p) and prefetch (at 2p+1) events. Both substreams are
-    # position-sorted, so the merge is a single searchsorted instead of a
-    # full argsort of the concatenation.
     total = nd + npf
     pf_slots = np.searchsorted(2 * profile.l2_pos, 2 * pf_pos + 1) + np.arange(npf)
     demand_slots = np.ones(total, dtype=bool)
@@ -275,17 +462,42 @@ def simulate_with_prefetch(
 
     m_issuer = np.full(total, -1, dtype=np.int8)
     m_issuer[pf_slots] = pf_issuer
+    return dict(
+        pf_blocks=pf_blocks,
+        pf_pos=pf_pos,
+        pf_issuer=pf_issuer,
+        pf_slots=pf_slots,
+        demand_slots=demand_slots,
+        mpos_s=mpos_s,
+        mblocks_s=mblocks_s,
+        m_is_pf_s=m_is_pf_s,
+        m_issuer=m_issuer,
+    )
 
-    with _stage("cache_pass[l2]"):
-        hit = cache_pass(mblocks_s, cfg.l2.sets, cfg.l2.ways)
+
+def _finish_prefetch_outcome(
+    profile: DemandProfile,
+    merged: dict,
+    hit: np.ndarray,
+    llc_hit: np.ndarray,
+    metadata_bytes: int,
+    keep_llc_stream: bool,
+) -> PrefetchOutcome:
+    """Classify + unmerge one scored stream back into a
+    :class:`PrefetchOutcome` (``hit`` over the merged stream, ``llc_hit``
+    over its L2-miss substream — however the passes were dispatched)."""
+    cfg = profile.cfg
+    mblocks_s = merged["mblocks_s"]
+    mpos_s = merged["mpos_s"]
+    m_is_pf_s = merged["m_is_pf_s"]
+    pf_slots = merged["pf_slots"]
+    demand_slots = merged["demand_slots"]
+    pf_blocks, pf_pos = merged["pf_blocks"], merged["pf_pos"]
+
     useful, late, redundant, early, fill_origin = classify_prefetch_events(
         mblocks_s, m_is_pf_s, mpos_s, hit, 2 * cfg.pf_fill_window
     )
-
-    # LLC sees every L2 miss (demand or prefetch) in order.
     llc_sel = ~hit
-    with _stage("cache_pass[llc]"):
-        llc_hit = cache_pass(mblocks_s[llc_sel], cfg.llc.sets, cfg.llc.ways)
     llc_is_pf = m_is_pf_s[llc_sel]
     llc_pos = mpos_s[llc_sel] // 2
 
@@ -297,7 +509,7 @@ def simulate_with_prefetch(
     pf_early = early[pf_slots]
     d_fill = fill_origin[demand_slots]
     demand_fill_issuer = np.where(
-        d_fill >= 0, m_issuer[np.maximum(d_fill, 0)], -1
+        d_fill >= 0, merged["m_issuer"][np.maximum(d_fill, 0)], -1
     ).astype(np.int8)
 
     # Demand LLC hits over demand L2 misses, in demand order: the demand
@@ -311,7 +523,7 @@ def simulate_with_prefetch(
 
     return PrefetchOutcome(
         pf_pos=pf_pos,
-        pf_issuer=pf_issuer,
+        pf_issuer=merged["pf_issuer"],
         pf_redundant=pf_redundant,
         pf_no_future=pf_no_future,
         pf_llc_in_dram=(~llc_hit)[llc_is_pf],

@@ -59,17 +59,17 @@ def test_engine_edge_geometries(engine):
 
 def test_engine_selection_plumbing(monkeypatch):
     monkeypatch.delenv("REPRO_CACHE_ENGINE", raising=False)
-    assert current_engine() == "set_parallel"  # the default
+    assert current_engine() == "fused"  # the default
     with use_engine("reference"):
         assert current_engine() == "reference"
         with use_engine("pallas"):
             assert current_engine() == "pallas"
         assert current_engine() == "reference"
-    assert current_engine() == "set_parallel"
+    assert current_engine() == "fused"
     monkeypatch.setenv("REPRO_CACHE_ENGINE", "reference")
     assert current_engine() == "reference"
-    set_engine("set_parallel")  # explicit override beats the env var
-    assert current_engine() == "set_parallel"
+    set_engine("fused")  # explicit override beats the env var
+    assert current_engine() == "fused"
     set_engine(None)
     assert current_engine() == "reference"
     monkeypatch.setenv("REPRO_CACHE_ENGINE", "bogus")

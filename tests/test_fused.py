@@ -1,0 +1,315 @@
+"""Fused multi-level hierarchy engine vs the per-level reference cascade.
+
+The fused engine's contract is *bit identity*: one carried L1→L2→LLC scan
+must emit exactly the hit levels of running the serial reference scan per
+level over successively compacted miss substreams, and its carried
+:class:`~repro.memsim.engine.CacheState` lists must compose with any
+per-level engine across shard seams.  Covered here: randomized streams x
+geometries (property test, including ways=1, single-set, repeated-block
+streams and carry resume at a mid-stream seam), degenerate inputs, the
+Pallas kernel variant in interpret mode, vmapped-batch == per-stream-loop
+identity (raw passes, prefetch scoring, and the Experiment cell layer),
+and an end-to-end check that a grid's rows are byte-identical under the
+fused and reference engines.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: seeded stub strategies
+    from _hypothesis_fallback import given, settings, st
+
+from repro.memsim import use_engine
+from repro.memsim.engine import canonicalize_state, init_state
+from repro.memsim.fused import (
+    fused_cache_pass,
+    fused_cache_pass_batch,
+    fused_group_count,
+    levels_to_hits,
+    state_from_groups,
+    state_to_groups,
+)
+from repro.memsim.scan_cache import cache_pass as cache_pass_reference
+
+THREE_LEVEL = ((16, 8), (64, 8), (256, 16))  # the SCALED demand geometry
+TWO_LEVEL = ((64, 8), (256, 16))  # the scoring (L2→LLC) geometry
+
+
+def reference_levels(blocks, levels, states=None, return_states=False):
+    """Hit levels via the serial reference scan, one level at a time."""
+    lvl = np.full(len(blocks), len(levels), dtype=np.int8)
+    pos = np.arange(len(blocks), dtype=np.int64)
+    sub = np.asarray(blocks)
+    out_states = []
+    for i, (sets, ways) in enumerate(levels):
+        st_i = None if states is None else states[i]
+        res = cache_pass_reference(sub, sets, ways, st_i, return_states)
+        hit = res[0] if return_states else res
+        if return_states:
+            out_states.append(res[1])
+        lvl[pos[hit]] = i
+        pos, sub = pos[~hit], sub[~hit]
+    return (lvl, out_states) if return_states else lvl
+
+
+@given(
+    n=st.integers(1, 400),
+    span=st.integers(1, 2000),
+    geom=st.sampled_from(
+        [
+            THREE_LEVEL,
+            TWO_LEVEL,
+            ((1, 4), (4, 1)),  # single-set L1, direct-mapped L2
+            ((4, 1), (8, 2), (16, 1)),  # ways=1 at the outer and inner level
+            ((8, 2), (8, 4)),  # equal set counts (R == 1 everywhere)
+        ]
+    ),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=40, deadline=None)
+def test_fused_bit_identical_to_reference(n, span, geom, seed):
+    rng = np.random.default_rng(seed)
+    blocks = rng.integers(0, span, n).astype(np.int64)
+    if seed % 3 == 0:
+        # repeated-block runs: same line touched many times back-to-back
+        blocks = np.repeat(blocks, rng.integers(1, 4, n))[: max(n, 1)]
+    ref, ref_sts = reference_levels(blocks, geom, return_states=True)
+    # force_scan pins the carried-scan path: these streams are small
+    # enough that the cost-based plan chooser would route them to the
+    # (already reference-gated) per-level cascade and test nothing new.
+    got, got_sts = fused_cache_pass(
+        blocks, geom, return_states=True, force_scan=True
+    )
+    np.testing.assert_array_equal(got, ref)
+    for a, b in zip(got_sts, ref_sts):
+        np.testing.assert_array_equal(a.tags, b.tags)
+        np.testing.assert_array_equal(a.age, b.age)
+    # the default plan (chooser picks scan or cascade) must agree too
+    np.testing.assert_array_equal(fused_cache_pass(blocks, geom), ref)
+    # shard-seam carry resume: fused first half, fused second half from the
+    # carried states == one uninterrupted pass; and the carried states are
+    # canonical, so the *reference* engine can resume them identically.
+    h = len(blocks) // 2
+    l1, sts = fused_cache_pass(
+        blocks[:h], geom, return_states=True, force_scan=True
+    )
+    l2 = fused_cache_pass(blocks[h:], geom, states=sts, force_scan=True)
+    np.testing.assert_array_equal(np.concatenate([l1, l2]), ref)
+    l2_ref = reference_levels(blocks[h:], geom, states=sts)
+    np.testing.assert_array_equal(l2, l2_ref)
+
+
+def test_fused_edge_cases():
+    rng = np.random.default_rng(0)
+    cases = [
+        (np.zeros(0, np.int64), THREE_LEVEL),  # empty stream
+        (np.zeros(1, np.int64), ((1, 1), (1, 1))),  # degenerate hierarchy
+        (np.full(50, 7, np.int64), ((4, 1), (16, 1))),  # repeated, direct-mapped
+        (rng.integers(0, 9, 300).astype(np.int64), ((1, 4), (1, 8))),  # one set
+        (np.arange(64, dtype=np.int64), TWO_LEVEL),  # all cold misses
+    ]
+    for blocks, geom in cases:
+        ref = reference_levels(blocks, geom)
+        got = fused_cache_pass(blocks, geom)
+        np.testing.assert_array_equal(got, ref, err_msg=f"{geom}")
+
+
+def test_fused_skewed_stream_falls_back_and_stays_identical():
+    """A stream concentrated in one group would pad to a matrix far larger
+    than the stream; the fused pass must route it through the per-level
+    cascade (bit-identical by the engine contract) instead of paying that
+    allocation."""
+    rng = np.random.default_rng(2)
+    geom = ((4096, 8), (8192, 8))
+    blocks = (rng.integers(0, 500, 2_000) * 4096).astype(np.int64)  # one set
+    ref = reference_levels(blocks, geom)
+    got = fused_cache_pass(blocks, geom)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_state_groups_roundtrip_and_group_count():
+    rng = np.random.default_rng(3)
+    assert fused_group_count(THREE_LEVEL) == 16
+    for sets, ways in THREE_LEVEL:
+        arr = rng.integers(0, 1000, (sets, ways))
+        lanes = state_to_groups(arr, 16)
+        assert lanes.shape == (16, sets // 16 * ways)
+        np.testing.assert_array_equal(
+            state_from_groups(lanes, sets, ways), arr
+        )
+
+
+def test_levels_to_hits_matches_cascade_masks():
+    rng = np.random.default_rng(4)
+    blocks = rng.integers(0, 800, 2_000).astype(np.int64)
+    lvl = fused_cache_pass(blocks, THREE_LEVEL)
+    masks = levels_to_hits(lvl, 3)
+    sub = blocks
+    for i, ((sets, ways), mask) in enumerate(zip(THREE_LEVEL, masks)):
+        np.testing.assert_array_equal(
+            mask, cache_pass_reference(sub, sets, ways), err_msg=f"level {i}"
+        )
+        sub = sub[~mask]
+
+
+def test_fused_pallas_interpret_matches_host_scan():
+    """The Pallas kernel variant (interpret mode off-TPU) must agree with
+    the host lax.scan on hit levels AND carried states, including resume."""
+    rng = np.random.default_rng(5)
+    for geom in (THREE_LEVEL, TWO_LEVEL):
+        blocks = rng.integers(0, 3000, 4_000).astype(np.int64)
+        ref, ref_sts = fused_cache_pass(
+            blocks, geom, return_states=True, use_pallas=False,
+            force_scan=True,
+        )
+        got, got_sts = fused_cache_pass(
+            blocks, geom, return_states=True, use_pallas=True
+        )
+        np.testing.assert_array_equal(got, ref)
+        for a, b in zip(got_sts, ref_sts):
+            np.testing.assert_array_equal(a.tags, b.tags)
+            np.testing.assert_array_equal(a.age, b.age)
+        # seam: resume the Pallas variant from a host-scan carry
+        h = len(blocks) // 2
+        l1, sts = fused_cache_pass(
+            blocks[:h], geom, return_states=True, use_pallas=False,
+            force_scan=True,
+        )
+        l2 = fused_cache_pass(blocks[h:], geom, states=sts, use_pallas=True)
+        np.testing.assert_array_equal(np.concatenate([l1, l2]), ref)
+
+
+def test_batched_pass_bit_identical_to_loop():
+    """One vmapped launch over same-geometry streams == looping the single
+    pass, for hit levels and final states, with varied lengths and carries."""
+    rng = np.random.default_rng(6)
+    streams = [
+        rng.integers(0, 1500, n).astype(np.int64) for n in (37, 400, 1200, 1)
+    ]
+    carries = [
+        [init_state(s, w) for s, w in TWO_LEVEL],
+        [
+            canonicalize_state(
+                rng.integers(0, 99, (s, w)), rng.integers(1, 50, (s, w))
+            )
+            for s, w in TWO_LEVEL
+        ],
+        [init_state(s, w) for s, w in TWO_LEVEL],
+        [init_state(s, w) for s, w in TWO_LEVEL],
+    ]
+    got, got_sts = fused_cache_pass_batch(
+        streams, TWO_LEVEL, states=carries, return_states=True,
+        force_scan=True,
+    )
+    for i, s in enumerate(streams):
+        ref, ref_sts = fused_cache_pass(
+            s, TWO_LEVEL, states=carries[i], return_states=True,
+            force_scan=True,
+        )
+        np.testing.assert_array_equal(got[i], ref, err_msg=f"stream {i}")
+        for a, b in zip(got_sts[i], ref_sts):
+            np.testing.assert_array_equal(a.tags, b.tags)
+            np.testing.assert_array_equal(a.age, b.age)
+
+
+def test_batched_pass_empty_and_skewed_fall_back():
+    rng = np.random.default_rng(7)
+    streams = [
+        rng.integers(0, 500, 100).astype(np.int64),
+        np.zeros(0, np.int64),  # empty member forces the loop path
+    ]
+    got = fused_cache_pass_batch(streams, TWO_LEVEL)
+    for i, s in enumerate(streams):
+        np.testing.assert_array_equal(got[i], fused_cache_pass(s, TWO_LEVEL))
+    assert fused_cache_pass_batch([], TWO_LEVEL) == []
+
+
+def test_simulate_demand_batch_matches_loop():
+    """Seed-replica demand batching == looping simulate_demand, on
+    run-heavy streams (the fused vmapped scan engages: collapse shrinks
+    every member's bucket) — per-level hit masks compared field by field
+    against the set_parallel loop."""
+    from repro.memsim import simulate_demand, simulate_demand_batch
+    from repro.memsim.config import SCALED
+
+    rng = np.random.default_rng(8)
+    items = []
+    for n in (20_000, 24_000, 18_000):
+        base = rng.integers(0, 4_000, n // 4).astype(np.int64)
+        blocks = np.repeat(base, 4)[:n]  # run-heavy: collapse wins
+        items.append((blocks, np.zeros(n, np.int64)))
+    with use_engine("set_parallel"):
+        ref = [simulate_demand(b, it, SCALED) for b, it in items]
+    with use_engine("fused"):
+        got = simulate_demand_batch(items, SCALED)
+    for i, (r, g) in enumerate(zip(ref, got)):
+        for f in ("l1_hit", "l2_hit", "llc_hit", "l2_pos"):
+            np.testing.assert_array_equal(
+                getattr(g, f), getattr(r, f), err_msg=f"stream {i}: {f}"
+            )
+
+
+@pytest.fixture(scope="module")
+def workload():
+    from repro.core import WorkloadSpec
+
+    with use_engine("fused"):
+        return WorkloadSpec("pgd", "comdblp").build()
+
+
+def test_simulate_with_prefetch_batch_matches_loop(workload):
+    """The batched scoring pass must reproduce the per-stream loop's
+    PrefetchOutcome fields bit-for-bit."""
+    import dataclasses
+
+    from repro.memsim import simulate_with_prefetch, simulate_with_prefetch_batch
+
+    rng = np.random.default_rng(8)
+    prof = workload.profile
+    streams = []
+    for k in (1, 4):  # two simple delta prefetchers as the family
+        pf_pos = prof.l2_pos[:: 7 * k].astype(np.int64)
+        pf_blocks = prof.blocks[pf_pos] + k
+        issuer = np.ones(len(pf_blocks), np.int8)
+        streams.append((pf_blocks, pf_pos, issuer))
+    with use_engine("fused"):
+        batched = simulate_with_prefetch_batch(prof, streams)
+        looped = [
+            simulate_with_prefetch(prof, b, p, pf_issuer=i)
+            for b, p, i in streams
+        ]
+    for got, ref in zip(batched, looped):
+        for f in dataclasses.fields(ref):
+            a, b = getattr(got, f.name), getattr(ref, f.name)
+            assert np.array_equal(a, b), f.name
+
+
+def test_score_prefetchers_batched_matches_loop(workload):
+    from repro.core.exec.scheduler import rows_equal
+    from repro.core.experiment import score_prefetcher, score_prefetchers_batched
+    from repro.core.registry import resolve_prefetchers
+
+    pairs = resolve_prefetchers(["rnr", "nextline2"])
+    with use_engine("fused"):
+        batched = [
+            m.row() for m in score_prefetchers_batched(workload, pairs)
+        ]
+        looped = [score_prefetcher(workload, n, g).row() for n, g in pairs]
+    assert rows_equal(looped, batched)
+
+
+def test_experiment_rows_byte_identical_fused_vs_reference():
+    """End-to-end: a small grid's result rows match bit-for-bit whether the
+    demand profiles and (batched) prefetch scoring run on the fused engine
+    or the serial reference."""
+    from repro.core import Experiment, WorkloadSpec
+    from repro.core.exec.scheduler import rows_equal
+
+    specs = [WorkloadSpec("pgd", "comdblp")]
+    prefetchers = ["rnr", "nextline2"]
+    with use_engine("fused"):
+        rows_fused = Experiment(workloads=specs, prefetchers=prefetchers).run().rows()
+    with use_engine("reference"):
+        rows_ref = Experiment(workloads=specs, prefetchers=prefetchers).run().rows()
+    assert rows_equal(rows_fused, rows_ref)

@@ -92,6 +92,44 @@ def test_estimate_cost_prefers_artifact_metadata(tmp_path):
     assert warm.measured and warm.build_s < cold.build_s
 
 
+def test_estimate_cost_prefers_measured_sidecar(tmp_path):
+    """Recorded per-task seconds beat every constant-based estimate:
+    ``build_s`` prices a rebuild when only the sidecar survived, and
+    ``score_s_per_prefetcher`` scales exactly with the prefetcher count."""
+    arts = ArtifactCache(tmp_path)
+    spec = WorkloadSpec(kernel="pgd", dataset=TINY)
+    assert arts.load_cost(spec) is None  # absent == None, not {}
+
+    # record_cost merges per field; latest measurement wins.
+    arts.record_cost(spec, build_s=12.5)
+    arts.record_cost(spec, score_s_per_prefetcher=0.75)
+    arts.record_cost(spec, build_s=10.0)
+    assert arts.load_cost(spec) == {
+        "build_s": 10.0,
+        "score_s_per_prefetcher": 0.75,
+    }
+
+    # No artifact on disk: the recorded build_s replaces the cold
+    # constant-based estimate and marks the cost as measured.
+    cost = estimate_cost(spec, 2, arts)
+    assert cost.measured
+    assert cost.build_s == 10.0
+    assert cost.score_s == pytest.approx(0.75 * 2)
+    assert estimate_cost(spec, 3, arts).score_s == pytest.approx(0.75 * 3)
+
+    # A materialized artifact demotes build to a load estimate (cheaper
+    # than the recorded rebuild), but scoring still uses the sidecar.
+    arts.path_for(spec).write_bytes(b"x" * 120_000)
+    warm = estimate_cost(spec, 2, arts)
+    assert warm.build_s < 10.0
+    assert warm.score_s == pytest.approx(0.75 * 2)
+
+    # A corrupt sidecar reads as absent, falling back to constants.
+    arts.cost_path(spec).write_text("not json")
+    assert arts.load_cost(spec) is None
+    assert estimate_cost(spec, 2, arts).score_s != pytest.approx(0.75 * 2)
+
+
 def test_plan_execution_deterministic_with_injected_host(tmp_path):
     arts = ArtifactCache(tmp_path)
     specs = [

@@ -34,6 +34,35 @@ def comparable(a: dict, b: dict) -> bool:
     )
 
 
+# Stage-key alias map for schema transitions that *replace* keys rather
+# than add them.  Schema v9's fused hierarchy engine collapses the
+# demand walk's per-level ``cache_pass[l1|l2|llc]`` launches into one
+# ``...[fused]`` stage (scoring keeps the per-level ``l2``/``llc`` keys
+# — its launches batch across prefetchers but stay per level); a naive
+# diff would show the fused key as new (never gated) and the per-level
+# keys as vanished.  When exactly one side of the diff has a fused key,
+# the other side is synthesized as the SUM of its per-level predecessor
+# keys, so the fused stage is compared against the work it replaced.
+# Both spellings are handled: the nested ``stages_s`` dict form
+# (``cache_pass.fused``) and the bracketed raw-key form the sharded
+# section uses (``cache_pass[fused]``).
+_ALIAS_LEVELS = ("l1", "l2", "llc")
+
+
+def _alias_sum(flat: dict, fused_key: str):
+    """Sum of ``fused_key``'s per-level predecessors in ``flat``, or None."""
+    if fused_key.endswith("cache_pass.fused"):
+        base = fused_key[: -len("fused")]
+        parts = [base + p for p in _ALIAS_LEVELS]
+    elif fused_key.endswith("cache_pass[fused]"):
+        base = fused_key[: -len("[fused]")]
+        parts = [f"{base}[{p}]" for p in _ALIAS_LEVELS]
+    else:
+        return None
+    vals = [flat[p] for p in parts if p in flat]
+    return sum(vals) if vals else None
+
+
 def diff_stages(
     old: dict,
     new: dict,
@@ -44,7 +73,9 @@ def diff_stages(
 
     Returns ``{"rows": [...], "regressions": [...]}`` where each row has
     the stage key, both timings, and the ratio; regressions are the rows
-    breaching both the ratio threshold and the absolute floor.
+    breaching both the ratio threshold and the absolute floor.  A fused
+    cache-pass key present on only one side diffs against the sum of the
+    other side's per-level keys (``"aliased": true`` on the row).
     """
     from benchmarks.perf_report import flatten_stages
 
@@ -53,6 +84,14 @@ def diff_stages(
     for key in sorted(set(f_old) | set(f_new)):
         o, n = f_old.get(key), f_new.get(key)
         row = {"stage": key, "old_s": o, "new_s": n}
+        if o is None and n is not None:
+            o = _alias_sum(f_old, key)
+            if o is not None:
+                row["old_s"], row["aliased"] = o, True
+        elif n is None and o is not None:
+            n = _alias_sum(f_new, key)
+            if n is not None:
+                row["new_s"], row["aliased"] = n, True
         if o is not None and n is not None and o > 0:
             row["ratio"] = n / o
             if n / o > threshold and (n - o) > min_seconds:
